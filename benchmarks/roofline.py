@@ -1,0 +1,58 @@
+"""Roofline report (deliverable g): read the dry-run JSONs and print the
+three-term roofline table per (arch x shape x mesh) with the dominant
+bottleneck and MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+
+Run the sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(verbose: bool = False):
+    recs = load_records()
+    return [r for r in recs if r.get("status") == "ok"]
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("roofline: no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    ok = [r for r in recs if r["status"] == "ok"]
+    print("roofline: arch, shape, mesh, t_compute_s, t_memory_s, "
+          "t_collective_s, dominant, useful_flops_ratio, hbm_gib_tpu_adj")
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        ufr = r.get("useful_flops_ratio")
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['dominant']},"
+              f"{ufr if ufr is None else round(ufr, 3)},"
+              f"{r.get('per_device_hbm_gib_tpu_adj', '?')}")
+    skip = [r for r in recs if r["status"] == "skip"]
+    fail = [r for r in recs if r["status"] == "fail"]
+    for r in skip:
+        print(f"# skip: {r['arch']} {r['shape']} {r['mesh']}: {r['reason']}")
+    for r in fail:
+        print(f"# FAIL: {r['arch']} {r['shape']} {r['mesh']}: {r['reason']}")
+    print(f"# {len(ok)} ok / {len(skip)} skip / {len(fail)} fail")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end serving driver: evaluate all five methods (CoT / SC /
+Slim-SC / DeepConf / STEP) on a batch of problems with the cached
+artifacts, reproducing the paper's Table-1 metric triple
+(accuracy / tokens / latency) at laptop scale.
+
+    PYTHONPATH=src python examples/serve_parallel_scaling.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
+
+from benchmarks.common import load_artifacts  # noqa: E402
+from repro.serving import EngineConfig, SamplingParams, evaluate_method, \
+    make_problems  # noqa: E402
+
+N_PROBLEMS = 6
+N_TRACES = 16
+
+
+def main():
+    params, scorer, cfg = load_artifacts()
+    problems = make_problems(N_PROBLEMS, seed=7, n_steps=(5, 8))
+    ecfg = EngineConfig(max_batch=N_TRACES, num_blocks=40, capacity=256,
+                        max_new_tokens=120,
+                        sampling=SamplingParams(max_new_tokens=120))
+    print(f"{'method':10s} {'acc':>5s} {'tokens':>8s} {'lat(s)':>7s} "
+          f"{'wait(s)':>8s} {'pruned':>6s} {'preempt':>7s}")
+    for method in ("cot", "sc", "slimsc", "deepconf", "step"):
+        pkw = {"warmup": 4} if method == "deepconf" else {}
+        res = evaluate_method(method, params, cfg, problems, N_TRACES, ecfg,
+                              scorer_params=scorer, policy_kwargs=pkw)
+        print(f"{method:10s} {res.accuracy:5.2f} {res.avg_tokens:8.0f} "
+              f"{res.avg_latency_s:7.2f} {res.total_wait_s:8.2f} "
+              f"{res.num_pruned:6d} {res.num_preemptions:7d}")
+
+
+if __name__ == "__main__":
+    main()

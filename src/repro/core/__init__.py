@@ -1,0 +1,19 @@
+"""STEP core: the paper's contribution.
+
+  scorer        — hidden-state step scorer (2-layer MLP, weighted BCE)
+  segmentation  — step-boundary detection ("\\n\\n" tokens in <think>)
+  trace         — running trace-score aggregation
+  pruning       — memory-aware STEP policy + SC / Slim-SC / DeepConf
+  voting        — majority / score-weighted / confidence-weighted votes
+"""
+from repro.core.pruning import (DeepConfPolicy, PruningPolicy,  # noqa: F401
+                                SelfConsistency, SingleTrace, SlimSCPolicy,
+                                StepPolicy, make_policy)
+from repro.core.scorer import (init_scorer, rank_accuracy,  # noqa: F401
+                               scorer_logits, scorer_score, train_scorer,
+                               ScorerTrainConfig)
+from repro.core.segmentation import (StepBoundaryDetector,  # noqa: F401
+                                     extract_think, split_steps)
+from repro.core.trace import Trace, TraceStatus  # noqa: F401
+from repro.core.voting import (majority_vote, vote_breakdown,  # noqa: F401
+                               weighted_vote)

@@ -1,0 +1,159 @@
+"""Pruning policies: STEP (ours) + the paper's baselines (§5.1).
+
+The engine consults the active policy at two points each scheduler step:
+
+  * ``traces_to_terminate(running)``   — signal-triggered early stopping
+    (DeepConf confidence threshold, Slim-SC similarity pruning);
+  * ``on_memory_full(running)``        — invoked when the paged KV pool
+    cannot schedule the next decode step. STEP returns the lowest-scored
+    trace to prune (freeing its blocks immediately — the waiting queue
+    never forms); baselines return None, which makes the engine PREEMPT
+    a trace vLLM-style (free blocks, re-enqueue, recompute later).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.trace import Trace
+from repro.core.voting import majority_vote, weighted_vote
+
+
+class PruningPolicy:
+    """Base: self-consistency behaviour (no pruning, preemption on OOM)."""
+
+    name = "sc"
+    uses_scorer = False
+
+    def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
+        return []
+
+    def on_memory_full(self, running: Sequence[Trace]) -> Optional[Trace]:
+        return None  # => engine preempts (waiting queue forms)
+
+    def vote(self, traces: Sequence[Trace]) -> Optional[str]:
+        return majority_vote([t.answer for t in traces])
+
+
+class SelfConsistency(PruningPolicy):
+    name = "sc"
+
+
+class SingleTrace(PruningPolicy):
+    """CoT baseline — the engine simply launches one trace."""
+    name = "cot"
+
+
+class StepPolicy(PruningPolicy):
+    """STEP (ours): hidden-state step scores + memory-aware pruning +
+    score-weighted voting."""
+
+    name = "step"
+    uses_scorer = True
+
+    def on_memory_full(self, running: Sequence[Trace]) -> Optional[Trace]:
+        candidates = [t for t in running if t.alive]
+        if not candidates:
+            return None
+        return min(candidates, key=lambda t: t.score)
+
+    def vote(self, traces: Sequence[Trace]) -> Optional[str]:
+        return weighted_vote([t.answer for t in traces],
+                             [t.score for t in traces])
+
+
+@dataclasses.dataclass
+class DeepConfPolicy(PruningPolicy):
+    """DeepConf-low (Fu et al., 2025): warmup N_init traces offline, set the
+    confidence threshold retaining the top ``keep_pct`` traces, terminate
+    later traces falling below it; confidence-weighted vote."""
+
+    warmup: int = 16
+    keep_pct: float = 0.10
+    min_tokens: int = 32  # don't judge traces before any signal exists
+
+    name = "deepconf"
+    uses_scorer = False
+
+    def __post_init__(self):
+        self.threshold: Optional[float] = None
+        self._warmup_confs: List[float] = []
+
+    def record_warmup(self, traces: Sequence[Trace]) -> None:
+        self._warmup_confs = [t.confidence for t in traces]
+        if self._warmup_confs:
+            self.threshold = float(np.quantile(
+                self._warmup_confs, 1.0 - self.keep_pct))
+
+    def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
+        if self.threshold is None:
+            return []
+        return [t for t in running
+                if t.num_tokens >= self.min_tokens
+                and t.confidence < self.threshold]
+
+    def vote(self, traces: Sequence[Trace]) -> Optional[str]:
+        return weighted_vote([t.answer for t in traces],
+                             [t.confidence for t in traces])
+
+
+@dataclasses.dataclass
+class SlimSCPolicy(PruningPolicy):
+    """Slim-SC (Hong et al., 2025), Random-Pruning variant: periodically
+    measure inter-trace similarity at the thought level and prune one of
+    any pair above the threshold."""
+
+    threshold: float = 0.95
+    check_every: int = 64   # tokens between similarity sweeps
+    ngram: int = 4
+    seed: int = 0
+
+    name = "slimsc"
+    uses_scorer = False
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+        self._last_check: dict = {}
+
+    @staticmethod
+    def _ngrams(tokens: List[int], n: int) -> set:
+        return {tuple(tokens[i:i + n]) for i in range(len(tokens) - n + 1)}
+
+    def similarity(self, a: Trace, b: Trace) -> float:
+        ga = self._ngrams(a.output_tokens, self.ngram)
+        gb = self._ngrams(b.output_tokens, self.ngram)
+        if not ga or not gb:
+            return 0.0
+        return len(ga & gb) / len(ga | gb)
+
+    def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
+        live = [t for t in running if t.alive and t.num_tokens
+                >= self.check_every]
+        due = [t for t in live if t.num_tokens
+               - self._last_check.get(t.trace_id, 0) >= self.check_every]
+        if not due:
+            return []
+        for t in live:
+            self._last_check[t.trace_id] = t.num_tokens
+        doomed: List[Trace] = []
+        for i, a in enumerate(live):
+            for b in live[i + 1:]:
+                if a in doomed or b in doomed:
+                    continue
+                if self.similarity(a, b) > self.threshold:
+                    doomed.append(self._rng.choice((a, b)))
+        return doomed
+
+
+def make_policy(name: str, **kw) -> PruningPolicy:
+    table = {
+        "cot": SingleTrace,
+        "sc": SelfConsistency,
+        "step": StepPolicy,
+        "deepconf": DeepConfPolicy,
+        "slimsc": SlimSCPolicy,
+    }
+    return table[name](**kw)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot spots the paper optimizes.
+
+  flash_attention — prefill attention (blockwise online softmax, SWA)
+  paged_attention — decode attention over the paged KV pool
+  ssd_scan        — Mamba2 SSD chunked scan (mamba2/zamba2 archs)
+  step_score      — fused STEP scorer MLP over decode-batch hiddens
+
+``ops`` holds the jit'd wrappers (interpret=True on CPU); ``ref`` holds
+the pure-jnp oracles the tests assert against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) every kernel executes with ``interpret=True`` —
+the kernel body runs in Python against the same BlockSpec tiling it would
+use on TPU. On a real TPU backend ``interpret`` resolves to False and the
+kernels compile to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import paged_attention as _paged
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import step_score as _score
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    blk_q: int = _flash.DEFAULT_BLK_Q,
+                    blk_k: int = _flash.DEFAULT_BLK_K):
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, blk_q=blk_q, blk_k=blk_k,
+                                  interpret=_interpret())
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, cache_lens, *,
+                    scale: float):
+    return _paged.paged_attention(q, k_pool, v_pool, block_tables,
+                                  cache_lens, scale=scale,
+                                  interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, head_group: int = 4,
+             initial_state=None):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         head_group=head_group,
+                         initial_state=initial_state,
+                         interpret=_interpret())
+
+
+def step_score(hidden, w1, b1, w2, b2, *, blk_b: int = _score.DEFAULT_BLK_B):
+    return _score.step_score(hidden, w1, b1, w2, b2, blk_b=blk_b,
+                             interpret=_interpret())
+
+
+def step_score_params(hidden, params):
+    """Convenience: scorer params dict -> fused kernel call."""
+    return step_score(hidden, params["w1"], params["b1"],
+                      params["w2"], params["b2"])

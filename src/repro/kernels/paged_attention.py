@@ -1,0 +1,131 @@
+"""Paged decode attention (THE serving hot spot) as a Pallas TPU kernel.
+
+One new query token per sequence attends over that sequence's KV blocks,
+looked up through a block table — the exact memory layout the STEP pruning
+policy manages (pruning a trace returns its blocks to this pool).
+
+TPU adaptation of vLLM's GPU PagedAttention:
+  * the block table and cache lengths are SCALAR-PREFETCHED (SMEM) so the
+    kernel can compute data-dependent block indices before the body runs —
+    the TPU-idiomatic replacement for GPU pointer-chasing;
+  * K/V pools stay in HBM (``memory_space=ANY``); each grid step loads one
+    [page, KVH_blk*hd] tile into registers/VMEM via dynamic slicing —
+    the analogue of the per-SM page loop in the CUDA kernel;
+  * grid = (batch, kv_heads, num_pages); the page dimension is the
+    sequential one carrying online-softmax state in VMEM scratch;
+  * GQA: all G = H // KVH query heads of one kv head are processed
+    together as a [G, hd] tile (G*hd columns feed the MXU at once).
+
+VMEM working set per step: page_size*hd (K) + page_size*hd (V) +
+G*page_size (scores) + G*hd (acc) floats — a few hundred KB at
+page_size=16..64, far under the 16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_tables_ref, cache_lens_ref,  # scalar prefetch
+                  q_ref, k_pool_ref, v_pool_ref, o_ref,
+                  m_scratch, l_scratch, acc_scratch,
+                  *, scale: float, page_size: int, num_pages: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    cache_len = cache_lens_ref[b]
+    page_start = p * page_size
+    # a page is live if any of its slots hold valid tokens
+    live = page_start < cache_len
+
+    @pl.when(live)
+    def _compute():
+        block_id = block_tables_ref[b, p]
+        # dynamic-slice one page of K/V for this kv head from HBM
+        k = k_pool_ref[block_id, pl.ds(0, page_size), h, :]
+        v = v_pool_ref[block_id, pl.ds(0, page_size), h, :]
+        k = k.astype(jnp.float32)              # [page, hd]
+        v = v.astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32)    # [G, hd]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, page]
+        slot = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = slot < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]                # [G, 1]
+        l_prev = l_scratch[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+        acc_scratch[...] = acc
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        l = l_scratch[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scratch[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, cache_lens: jax.Array, *,
+                    scale: float, interpret: bool = False) -> jax.Array:
+    """q [B, H, hd]; pools [NB, page, KVH, hd]; block_tables [B, bp];
+    cache_lens [B]. Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    NB, page_size, KVH, _ = k_pool.shape
+    bp = block_tables.shape[1]
+    G = H // KVH
+    # [B, KVH, G, hd]: all G query heads of a kv head form one MXU tile
+    qg = q.reshape(B, KVH, G, hd)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, page_size=page_size, num_pages=bp)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, bp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, cache_lens, qg, k_pool, v_pool)
+    return out.reshape(B, H, hd)

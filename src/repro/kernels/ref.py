@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+            causal: bool = True, window: Optional[int] = None,
+            scale: Optional[float] = None) -> jax.Array:
+    """Full attention. q/k/v [B, H, S, hd] (kv heads already broadcast)."""
+    B, H, S, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, cache_lens: jax.Array,
+                        scale: float) -> jax.Array:
+    """Decode attention over a paged pool.
+
+    q [B, H, hd]; pools [NB, bs, KVH, hd]; block_tables [B, bp];
+    cache_lens [B]. Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    NB, bs, KVH, _ = k_pool.shape
+    bp = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    v = v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(bp * bs)[None, :] < cache_lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v.dtype), v)
+    return out.reshape(B, H, hd)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                 Bm: jax.Array, Cm: jax.Array,
+                 initial_state: Optional[jax.Array] = None):
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x [B,S,H,P]; dt [B,S,H]; A [H]; Bm/Cm [B,S,N].
+    h_t = h_{t-1} * exp(dt_t A) + dt_t B_t x_t ;  y_t = C_t h_t.
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dt_t * A[None, :])  # [B,H]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        h = h * decay[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def step_score_ref(hidden: jax.Array, w1: jax.Array, b1: jax.Array,
+                   w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Fused 2-layer MLP scorer. hidden [B, D] -> scores [B]."""
+    z = jax.nn.relu(hidden.astype(jnp.float32) @ w1 + b1)
+    return jax.nn.sigmoid((z @ w2 + b2)[..., 0])

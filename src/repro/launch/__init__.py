@@ -1,0 +1,6 @@
+"""Launchers: production mesh, sharding rules, step functions, dry-run.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS for 512 host devices as its very
+first statement — import it only in a dedicated process, never from tests
+or benchmarks that need the real single-device CPU backend.
+"""

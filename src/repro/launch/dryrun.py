@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, proving the distribution config is coherent
+without hardware, and extract the roofline terms from the compiled HLO.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape decode_32k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, input_specs, kv_cache_specs
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.launch import shardings as shd
+from repro.launch.hlo_analysis import hlo_cost, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models.init import init_params
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Gradient-accumulation factors chosen so peak train_4k HBM fits the
+# 16 GiB v5e budget (measured via compiled.memory_analysis; see
+# EXPERIMENTS.md §Dry-run). Archs not listed run the full batch at once.
+TRAIN_MICROBATCHES = {
+    "granite-20b": 2,
+    "mixtral-8x7b": 2,
+    "deepseek-v2-236b": 16,
+    "seamless-m4t-large-v2": 2,
+    "zamba2-2.7b": 2,
+}
+
+# deepseek-v2-236b: fp32 Adam moments are 1.9 TB — more than 7 GB/chip on
+# a 256-chip pod before any activation. Stored bf16 (update math fp32);
+# the gradient accumulator is likewise bf16 (every add is computed fp32).
+TRAIN_MOMENT_DTYPE = {
+    "deepseek-v2-236b": "bfloat16",
+}
+TRAIN_ACCUM_DTYPE = {
+    "deepseek-v2-236b": "bfloat16",
+}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D tokens (dense) / 6*N_active*D (MoE), where N
+    counts ACTIVE non-embedding params and D = tokens processed."""
+    from repro.models.init import padded_vocab
+
+    # active params per token
+    D = cfg.d_model
+    n = 0
+    if cfg.arch_type in ("ssm", "hybrid"):
+        di = cfg.d_inner
+        Nn = cfg.ssm_state_size
+        per_mamba = D * (2 * di + 2 * Nn + cfg.ssm_heads) + di * D \
+            + cfg.ssm_conv_width * (di + 2 * Nn)
+        n += cfg.num_layers * per_mamba
+        if cfg.arch_type == "hybrid":
+            attn = D * cfg.num_heads * cfg.head_dim * 2 \
+                + 2 * D * cfg.num_kv_heads * cfg.head_dim \
+                + 3 * D * cfg.d_ff
+            n += (cfg.num_layers // cfg.hybrid_attn_every) * attn
+    else:
+        if cfg.use_mla:
+            attn = (D * cfg.q_lora_rank
+                    + cfg.q_lora_rank * cfg.num_heads
+                    * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+                    + D * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                    + cfg.kv_lora_rank * cfg.num_heads
+                    * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                    + cfg.num_heads * cfg.v_head_dim * D)
+        else:
+            attn = D * cfg.num_heads * cfg.head_dim \
+                + 2 * D * cfg.num_kv_heads * cfg.head_dim \
+                + cfg.num_heads * cfg.head_dim * D
+        if cfg.uses_moe:
+            ff = 3 * D * cfg.moe_d_ff * (cfg.num_experts_per_tok
+                                         + cfg.num_shared_experts)
+        else:
+            ff = 3 * D * cfg.d_ff
+        n += cfg.num_layers * (attn + ff)
+        if cfg.is_encoder_decoder:
+            enc = cfg.num_encoder_layers * (attn + 3 * D * cfg.d_ff)
+            n += enc + cfg.num_layers * attn  # cross attention
+    n += D * padded_vocab(cfg)  # lm head
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def build_lowerable(cfg, shape_name, mesh, out=None):
+    """Returns (jitted_fn, arg_shapedtypes) for this cfg x shape.
+
+    ``out`` (optional dict) receives side info, e.g. the per-device bf16
+    parameter bytes used for the CPU-upcast HBM adjustment.
+    """
+    shape = SHAPES[shape_name]
+    in_specs = input_specs(cfg, shape_name)
+    batch_specs = shd.partition_inputs(cfg, mesh, shape_name)
+    batch_shardings = {k: jax.NamedSharding(mesh, batch_specs[k])
+                       for k in in_specs}
+
+    params_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+    if shape.kind == "train":
+        pspecs = shd.partition_params(cfg, mesh, params_shapes, fsdp=True)
+        psh = shd.to_named(mesh, pspecs)
+        from jax.sharding import PartitionSpec as P
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        act_spec = P(dp, None, "model")
+        base_name = cfg.name.split("-smoke")[0]
+        # NOTE: no moe_experts hoist at train time — measured on mixtral
+        # train_4k it converts per-chunk weight all-gathers into per-layer
+        # weight-grad all-reduces and makes the collective term WORSE
+        # (115 s -> 139 s). See EXPERIMENTS.md #Perf iteration 1.
+        step, opt = make_train_step(
+            cfg, act_spec=act_spec,
+            microbatches=TRAIN_MICROBATCHES.get(base_name, 1),
+            moment_dtype=TRAIN_MOMENT_DTYPE.get(base_name, "float32"),
+            accum_dtype=TRAIN_ACCUM_DTYPE.get(base_name, "float32"))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        ospecs = shd.partition_opt_state(cfg, mesh, opt_shapes, pspecs)
+        osh = shd.to_named(mesh, ospecs)
+        if out is not None:
+            import jax.numpy as jnp
+            out["bf16_param_bytes_dev"] = shd.sharded_bytes_per_device(
+                params_shapes, pspecs, mesh, dtype_filter=jnp.bfloat16)
+        fn = jax.jit(step, in_shardings=(psh, osh, batch_shardings),
+                     out_shardings=(psh, osh,
+                                    jax.NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, in_specs)
+        return fn, args
+
+    from jax.sharding import PartitionSpec as P2
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    b = shape.global_batch
+    total_dp = 1
+    for a in dp:
+        total_dp *= mesh.shape[a]
+    dp_ok = dp if b % total_dp == 0 else None
+    kvsp = shd.kv_partition_specs(cfg, mesh, b)
+    # MoE at serving time: move the dispatched activations to the
+    # stationary (E-model, D-data)-sharded expert weights; even at
+    # prefill the dispatched tokens (64 GB global for deepseek) are far
+    # cheaper than per-layer weight gathers (450 GB). #Perf iteration.
+    exin = shd.moe_ex_in_spec(cfg, mesh)
+    if exin is not None:
+        kvsp["moe_ex_in"] = exin
+
+    pspecs = shd.partition_params(cfg, mesh, params_shapes)
+    psh = shd.to_named(mesh, pspecs)
+    if out is not None:
+        import jax.numpy as jnp
+        out["bf16_param_bytes_dev"] = shd.sharded_bytes_per_device(
+            params_shapes, pspecs, mesh, dtype_filter=jnp.bfloat16)
+    if shape.kind == "prefill":
+        act_spec = P2(dp_ok, None, "model")
+        step = make_prefill_step(cfg, act_spec=act_spec, kv_specs=kvsp)
+        fn = jax.jit(step, in_shardings=(psh, batch_shardings))
+        return fn, (params_shapes, in_specs)
+
+    # decode: cache out-sharding == in-sharding (steady state, donated)
+    cache_shapes = kv_cache_specs(cfg, shape_name)
+    cspecs = shd.partition_cache(cfg, mesh, shape_name)
+    csh = {k: jax.NamedSharding(mesh, cspecs[k]) for k in cache_shapes}
+    step = make_decode_step(cfg, kv_specs=kvsp)
+    out_sh = {"next_token": jax.NamedSharding(mesh, P2(dp_ok)),
+              "hidden": jax.NamedSharding(mesh, P2(dp_ok, "model")),
+              "cache": csh}
+    fn = jax.jit(step, in_shardings=(psh, batch_shardings, csh),
+                 out_shardings=out_sh, donate_argnums=(2,))
+    return fn, (params_shapes, in_specs, cache_shapes)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "skip", "reason": None}
+
+    if not cfg.supports_shape(shape):
+        rec["reason"] = "unsupported shape (see DESIGN.md long_500k policy)"
+        return rec
+    if cfg.is_encoder_decoder and shape.kind == "decode" \
+            and shape.name == "long_500k" \
+            and cfg.long_context_window is None:
+        rec["reason"] = "enc-dec without long-context window"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    side = {}
+    try:
+        fn, args = build_lowerable(cfg, shape_name, mesh, out=side)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        # trip-count-weighted per-device cost parsed from the HLO (XLA's
+        # cost_analysis counts while bodies once — see hlo_analysis.py)
+        cost = hlo_cost(hlo, score_seq_len=shape.seq_len
+                        if shape.kind in ("train", "prefill") else None)
+        flops = cost["flops"]            # per device
+        hbm_bytes = cost["bytes"]        # per device
+        coll_total = cost["collective_bytes"]
+        terms = roofline_terms(flops, hbm_bytes, coll_total, chips=1)
+        mf = model_flops(cfg, shape)     # global
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "hlo_flops_per_dev": flops,
+            "hlo_bytes_per_dev": hbm_bytes,
+            "collective_bytes_per_dev": coll_total,
+            "collective_breakdown": cost["collective_breakdown"],
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / (flops * chips)) if flops else None,
+            # measured projection: HBM traffic if attention ran as the
+            # Pallas flash kernel (score temporaries VMEM-resident)
+            "score_bytes_per_dev": cost.get("score_bytes", 0.0),
+            "t_memory_flash_proj_s": (hbm_bytes - cost.get("score_bytes",
+                                                           0.0)) / 819e9,
+            **terms,
+        })
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+            args_b = rec.get("argument_size_in_bytes", 0)
+            tmp_b = rec.get("temp_size_in_bytes", 0)
+            rec["per_device_hbm_gib"] = round((args_b + tmp_b) / 2**30, 3)
+            # XLA-CPU has no native bf16 matmul: it materialises fp32
+            # copies of every bf16 weight (2x param bytes of pure temp
+            # that does NOT exist on TPU, where the MXU consumes bf16
+            # directly). Report the TPU-adjusted figure alongside raw.
+            upcast = 2 * side.get("bf16_param_bytes_dev", 0)
+            rec["cpu_f32_upcast_bytes_est"] = upcast
+            rec["per_device_hbm_gib_tpu_adj"] = round(
+                (args_b + max(tmp_b - upcast, 0)) / 2**30, 3)
+    except Exception as e:  # noqa: BLE001 — a failure here IS the finding
+        rec["status"] = "fail"
+        rec["reason"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_one(arch, shape, mp)
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"dom={rec['dominant']} "
+                             f"hbm={rec.get('per_device_hbm_gib', '?')}GiB "
+                             f"compile={rec['compile_s']}s")
+                elif rec.get("reason"):
+                    extra = rec["reason"][:90]
+                print(f"[{rec['mesh']}] {arch:24s} {shape:12s} "
+                      f"{status:5s} {extra}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_fail} fail, {n_skip} skip "
+          f"of {len(results)}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,369 @@
+"""Roofline-term extraction from compiled (post-SPMD, per-device) HLO.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for a
+layer-scanned transformer that under-counts FLOPs by ~num_layers (we
+verified: a 10-trip scan of a 128^3 matmul reports 4.19e6 flops, the
+single-matmul count). So we parse the HLO text ourselves:
+
+  * every computation's instructions are parsed into a symbol table
+    (value name -> shape) so operand shapes resolve;
+  * the ENTRY computation is walked recursively; ``while`` bodies are
+    weighted by their trip count (the constant in the loop condition),
+    nested loops multiply;
+  * FLOPs: 2 * result_elements * K for every ``dot`` (K = product of the
+    lhs contracting dims), including dots inside fusions;
+  * HBM bytes: operand + result bytes of every top-level instruction
+    (fusion internals are register/VMEM-resident; only boundaries touch
+    HBM), excluding shape-only ops (tuple/get-tuple-element/bitcast/...);
+  * collective bytes: result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+All numbers are PER DEVICE (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 TFLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that move no data themselves
+_SHAPE_ONLY = {"tuple", "get-tuple-element", "bitcast", "parameter",
+               "constant", "after-all", "iota", "partition-id",
+               "replica-id", "reshape"}
+
+_SHAPE_RE = re.compile(r"(\w[\w.]*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes_and_dims(type_str: str):
+    """Parse 'f32[128,128]{1,0}' or a tuple '(s32[], f32[2,4])'.
+    Returns (total_bytes, dims_of_first_array)."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims_s = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        total += math.prod(dims) * _DTYPE_BYTES[dtype] if dims \
+            else _DTYPE_BYTES[dtype]
+        if first_dims is None:
+            first_dims = dims
+    return total, (first_dims or [])
+
+
+class _Instr:
+    __slots__ = ("name", "op", "type_str", "result_bytes", "result_dims",
+                 "operands", "line")
+
+    def __init__(self, name, op, type_str, operands, line):
+        self.name = name
+        self.op = op
+        self.type_str = type_str
+        self.result_bytes, self.result_dims = _shape_bytes_and_dims(type_str)
+        self.operands = operands
+        self.line = line
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and ("(" in stripped):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        # operand names: %refs inside the first paren group only
+        start = line.find(op + "(") + len(op) + 1
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = _NAME_RE.findall(line[start:i - 1])
+        comps[cur].append(_Instr(name, op, type_str, operands, line))
+    return comps
+
+
+def _trip_count(instrs: List[_Instr]) -> int:
+    consts = []
+    for ins in instrs:
+        consts += [int(m.group(1)) for m in _CONST_RE.finditer(ins.line)]
+    return max(consts) if consts else 1
+
+
+class HloCost:
+    """Trip-count-weighted per-device cost extracted from HLO text.
+
+    ``score_seq_len``: when set, bytes of attention-SCORE-shaped buffers
+    (result dims [..., score_seq_len, chunk<=score_seq_len]) are tallied
+    separately in ``score_bytes``. These are the [B, H, S, chunk] online-
+    softmax temporaries that only exist because the XLA fallback spills
+    them to HBM; the Pallas flash kernel (kernels/flash_attention.py)
+    keeps them VMEM-resident, so ``bytes - score_bytes`` is the measured
+    projection of running the same program with the kernel.
+    """
+
+    def __init__(self, hlo: str, score_seq_len: Optional[int] = None):
+        self.comps = _parse_computations(hlo)
+        self.score_seq_len = score_seq_len
+        self.score_bytes = 0.0
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+        self.entry = m.group(1) if m else next(iter(self.comps), None)
+        if self.entry is not None and self.entry in self.comps:
+            self.flops, self.bytes, self.coll, self.score_bytes = \
+                self._walk(self.entry)
+        else:
+            self.flops, self.bytes, self.coll = 0.0, 0.0, {}
+
+    def _is_score_like(self, dims) -> bool:
+        S = self.score_seq_len
+        if S is None or len(dims) < 2:
+            return False
+        return dims[-2] == S and 0 < dims[-1] <= S
+
+    # ------------------------------------------------------------------
+    def _symtab(self, name: str) -> Dict[str, _Instr]:
+        return {ins.name: ins for ins in self.comps.get(name, [])}
+
+    def _operand_bytes(self, ins: _Instr, tab: Dict[str, _Instr]) -> int:
+        total = 0
+        for op_name in ins.operands:
+            ref = tab.get(op_name)
+            if ref is not None:
+                total += ref.result_bytes
+        return total
+
+    def _fusion_bytes(self, ins: _Instr, tab: Dict[str, _Instr],
+                      callee: str) -> float:
+        """HBM traffic of one fusion: operands that the fused body only
+        dynamic-slices contribute the SLICE bytes, not the full buffer
+        (XLA fuses the loop-carried cache slice into its consumers; the
+        full [L, B, cap, ...] operand is never streamed). A fusion whose
+        root dynamic-update-slices a parameter writes only the update."""
+        body = self.comps.get(callee, [])
+        btab = self._symtab(callee)
+        # parameter index -> body value name
+        param_of: Dict[str, int] = {}
+        for b in body:
+            if b.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", b.line)
+                if m:
+                    param_of[b.name] = int(m.group(1))
+        sliced_bytes: Dict[int, float] = {}
+        fully_read: set = set()
+        dus_write: float = -1.0
+        for b in body:
+            for oi, op_name in enumerate(b.operands):
+                if op_name not in param_of:
+                    continue
+                idx = param_of[op_name]
+                if b.op in ("dynamic-slice", "slice") and oi == 0:
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) \
+                        + 2 * b.result_bytes
+                elif b.op == "dynamic-update-slice" and oi == 0:
+                    upd = btab.get(b.operands[1]) \
+                        if len(b.operands) > 1 else None
+                    w = 2 * (upd.result_bytes if upd else 0)
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) + w
+                    if "ROOT" in b.line:
+                        dus_write = max(dus_write, float(w))
+                elif b.op == "gather" and oi == 0:
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) \
+                        + 2 * b.result_bytes
+                else:
+                    fully_read.add(idx)
+        total = 0.0
+        for oi, op_name in enumerate(ins.operands):
+            ref = tab.get(op_name)
+            if ref is None:
+                continue
+            if oi in sliced_bytes and oi not in fully_read:
+                total += sliced_bytes[oi]
+            else:
+                total += ref.result_bytes
+        total += dus_write if dus_write >= 0 else ins.result_bytes
+        return total
+
+    def _dot_flops(self, ins: _Instr, tab: Dict[str, _Instr]) -> float:
+        res_el = math.prod(ins.result_dims) if ins.result_dims else 1
+        m = _CONTRACT_RE.search(ins.line)
+        if not m or not ins.operands:
+            return 0.0
+        lhs = tab.get(ins.operands[0])
+        if lhs is None:
+            return 0.0
+        k = 1
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            if d < len(lhs.result_dims):
+                k *= lhs.result_dims[d]
+        return 2.0 * res_el * k
+
+    # ------------------------------------------------------------------
+    def _walk(self, name: str, depth: int = 0):
+        if name in self._memo:
+            return self._memo[name]
+        if depth > 60 or name not in self.comps:
+            return 0.0, 0.0, {}, 0.0
+        tab = self._symtab(name)
+        flops = 0.0
+        bts = 0.0
+        sb = 0.0  # attention-score-shaped traffic (flash-eliminable)
+        coll: Dict[str, float] = {}
+
+        def score_part(ins_, total):
+            # split: bytes touching score-shaped buffers (result or
+            # operands) count toward the flash-eliminable pool
+            if self._is_score_like(ins_.result_dims):
+                return total
+            for opn in ins_.operands:
+                ref = tab.get(opn)
+                if ref is not None and self._is_score_like(ref.result_dims):
+                    return total
+            return 0.0
+
+        for ins in self.comps[name]:
+            op = ins.op
+            if op == "dot":
+                flops += self._dot_flops(ins, tab)
+                b = ins.result_bytes + self._operand_bytes(ins, tab)
+                bts += b
+                sb += score_part(ins, b)
+            elif any(op.startswith(c) for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if op.startswith(c))
+                coll[base] = coll.get(base, 0.0) + ins.result_bytes
+                bts += ins.result_bytes + self._operand_bytes(ins, tab)
+            elif op == "fusion":
+                cm = _CALLS_RE.search(ins.line)
+                if cm and cm.group(1) in self.comps:
+                    b = self._fusion_bytes(ins, tab, cm.group(1))
+                    bts += b
+                    sb += score_part(ins, b)
+                    ftab = self._symtab(cm.group(1))
+                    for fins in self.comps[cm.group(1)]:
+                        if fins.op == "dot":
+                            flops += self._dot_flops(fins, ftab)
+                else:
+                    bts += ins.result_bytes + self._operand_bytes(ins, tab)
+            elif op == "while":
+                bm = _WHILE_RE.search(ins.line)
+                cm = _COND_RE.search(ins.line)
+                trips = _trip_count(
+                    self.comps.get(cm.group(1), [])) if cm else 1
+                if bm and bm.group(1) != name:
+                    f, b, c, s_ = self._walk(bm.group(1), depth + 1)
+                    flops += f * trips
+                    bts += b * trips
+                    sb += s_ * trips
+                    for k, v in c.items():
+                        coll[k] = coll.get(k, 0.0) + v * trips
+            elif op in ("call", "conditional", "custom-call", "async-start"):
+                bts += ins.result_bytes + self._operand_bytes(ins, tab)
+                for cm in _CALLS_RE.finditer(ins.line):
+                    callee = cm.group(1)
+                    if callee in self.comps and callee != name:
+                        f, b, c, s_ = self._walk(callee, depth + 1)
+                        flops += f
+                        bts += b
+                        sb += s_
+                        for k, v in c.items():
+                            coll[k] = coll.get(k, 0.0) + v
+            elif op in _SHAPE_ONLY:
+                continue
+            elif op in ("dynamic-slice", "slice"):
+                # touches only the sliced region (read) + result (write)
+                bts += 2 * ins.result_bytes
+            elif op == "dynamic-update-slice":
+                # in-place: reads+writes only the update region
+                if len(ins.operands) >= 2:
+                    upd = tab.get(ins.operands[1])
+                    bts += 2 * (upd.result_bytes if upd else 0)
+            elif op == "gather":
+                idx = tab.get(ins.operands[1]) if len(ins.operands) > 1 \
+                    else None
+                bts += 2 * ins.result_bytes + (idx.result_bytes if idx
+                                               else 0)
+            elif op == "scatter":
+                # in-place on the big operand: traffic = updates + indices
+                upd = tab.get(ins.operands[2]) if len(ins.operands) > 2 \
+                    else None
+                idx = tab.get(ins.operands[1]) if len(ins.operands) > 1 \
+                    else None
+                bts += 2 * (upd.result_bytes if upd else 0) \
+                    + (idx.result_bytes if idx else 0)
+            elif op == "broadcast":
+                bts += ins.result_bytes + self._operand_bytes(ins, tab)
+            else:
+                # reduce / copy / convert / transpose / pad / ...
+                b = ins.result_bytes + self._operand_bytes(ins, tab)
+                bts += b
+                sb += score_part(ins, b)
+        self._memo[name] = (flops, bts, coll, sb)
+        return self._memo[name]
+
+
+def hlo_cost(hlo: str, score_seq_len: Optional[int] = None
+             ) -> Dict[str, float]:
+    hc = HloCost(hlo, score_seq_len=score_seq_len)
+    return {"flops": hc.flops, "bytes": hc.bytes,
+            "score_bytes": hc.score_bytes,
+            "collective_breakdown": hc.coll,
+            "collective_bytes": float(sum(hc.coll.values()))}
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Per-kind collective result bytes (trip-count weighted)."""
+    return HloCost(hlo).coll
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int = 1) -> Dict[str, float]:
+    """The three roofline times (seconds) + dominant term. Pass PER-DEVICE
+    numbers with chips=1 (the HLO module is the per-device program)."""
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes / (chips * ICI_BW)
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,50 @@
+"""Serving launcher: run the STEP engine (or a baseline) over a batch of
+synthetic reasoning requests with the trained artifacts.
+
+    PYTHONPATH=src python -m repro.launch.serve --method step \
+        --problems 8 --traces 16 [--blocks 64]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.serving import EngineConfig, SamplingParams, evaluate_method, \
+    make_problems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="step",
+                    choices=["cot", "sc", "slimsc", "deepconf", "step"])
+    ap.add_argument("--problems", type=int, default=4)
+    ap.add_argument("--traces", type=int, default=16)
+    ap.add_argument("--blocks", type=int, default=48,
+                    help="paged KV pool size (the 'GPU memory')")
+    ap.add_argument("--max-new", type=int, default=96)
+    ap.add_argument("--difficulty", type=int, nargs=2, default=(5, 8),
+                    metavar=("MIN", "MAX"), help="ops per problem")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+
+    from benchmarks.common import load_artifacts
+    params, scorer, cfg = load_artifacts()
+
+    ecfg = EngineConfig(
+        max_batch=args.traces, num_blocks=args.blocks, capacity=256,
+        max_new_tokens=args.max_new,
+        sampling=SamplingParams(max_new_tokens=args.max_new))
+    problems = make_problems(args.problems, seed=args.seed,
+                             n_steps=tuple(args.difficulty))
+    pkw = {"warmup": max(2, args.traces // 4)} \
+        if args.method == "deepconf" else {}
+    res = evaluate_method(args.method, params, cfg, problems, args.traces,
+                          ecfg, scorer_params=scorer, policy_kwargs=pkw,
+                          verbose=True)
+    print(f"\n[{args.method}] acc={res.accuracy:.2f} "
+          f"tokens={res.avg_tokens:.0f} latency={res.avg_latency_s:.2f}s "
+          f"wait={res.total_wait_s:.2f}s pruned={res.num_pruned} "
+          f"preempt={res.num_preemptions}")
+
+
+if __name__ == "__main__":
+    main()

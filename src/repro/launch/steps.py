@@ -1,0 +1,102 @@
+"""Step functions the launcher lowers: train / prefill / serve-decode.
+
+These are the production entry points — the same model code paths the
+engine and trainer exercise, wrapped for pjit lowering on the big meshes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_full, lm_loss, serve_decode_step
+from repro.training.optimizer import AdamW
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-4,
+                    act_spec=None,
+                    microbatches: int = 1,
+                    moment_dtype: str = "float32",
+                    accum_dtype: str = "float32",
+                    kv_specs=None
+                    ) -> Tuple[Callable, AdamW]:
+    """Full training step: fwd (remat + sharded residual stream) + bwd +
+    AdamW update.
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch
+    is split into k sequential microbatches whose fp32 gradients
+    accumulate before one optimizer update — the lever that bounds peak
+    activation memory for the largest train_4k configs.
+    """
+    opt = AdamW(learning_rate=lr, weight_decay=0.01,
+                moment_dtype=moment_dtype)
+
+    def loss_fn(p, batch):
+        return lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                       remat=True, act_spec=act_spec, kv_specs=kv_specs,
+                       modality_embeds=batch.get("modality_embeds"),
+                       encoder_embeds=batch.get("encoder_embeds"))
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            k = microbatches
+
+            def split(x):
+                return jnp.moveaxis(
+                    x.reshape(k, x.shape[0] // k, *x.shape[1:]), 0, 0)
+
+            mbs = {key: split(v) for key, v in batch.items()}
+
+            adt = jnp.dtype(accum_dtype)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32)).astype(adt),
+                    acc, g)
+                return acc, l
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            gacc, losses = jax.lax.scan(body, gacc0, mbs)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / k, gacc)
+            loss = jnp.mean(losses)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, act_spec=None,
+                      kv_specs=None) -> Callable:
+    """Prefill: full forward over the prompt, returning the last-position
+    logits (to sample the first token) and the KV/state to seed decode."""
+
+    def prefill_step(params, batch):
+        out = forward_full(params, cfg, batch["tokens"], return_kv=True,
+                           act_spec=act_spec, kv_specs=kv_specs,
+                           modality_embeds=batch.get("modality_embeds"),
+                           encoder_embeds=batch.get("encoder_embeds"))
+        return {"next_logits": out["logits"][:, -1], "kvs": out["kvs"]}
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, kv_specs=None) -> Callable:
+    """One decode step over the distributed contiguous cache; returns the
+    greedy next token, the STEP-scorer hidden state, and the new cache."""
+
+    def decode_fn(params, batch, cache):
+        out = serve_decode_step(params, cfg, batch["tokens"],
+                                batch["positions"], cache,
+                                kv_specs=kv_specs)
+        next_tok = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+        return {"next_token": next_tok, "hidden": out["hidden"],
+                "cache": out["cache"]}
+
+    return decode_fn

@@ -1,0 +1,844 @@
+"""Model-zoo primitive layers (pure functions, params-as-pytrees).
+
+All matmul weights are 2-D ``[in, out]`` so tensor-parallel sharding happens
+on fused dims (always divisible by the 16-way model axis); head reshapes are
+internal. Norms/softmax accumulate in fp32; weights/activations are bf16.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float):
+    """positions [...]; returns cos/sin [..., dim/2] in fp32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., H, hd]; cos/sin broadcastable [..., 1, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    """p: {w_gate [D,F], w_up [D,F], w_down [F,D]}"""
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# dense / GQA attention — full sequence (train & prefill)
+# ---------------------------------------------------------------------------
+
+# Above this sequence length the naive S^2 score tensor cannot be
+# materialised (824 TB for granite-20b at train_4k); attention switches to
+# the chunked online-softmax path (flash semantics in plain XLA) which is
+# what actually lowers for the 32k/500k dry-run shapes.
+CHUNKED_ATTN_THRESHOLD = 1024
+ATTN_CHUNK = 512
+
+
+def chunked_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+                window: Optional[int] = None,
+                chunk: int = ATTN_CHUNK,
+                causal: bool = True) -> jax.Array:
+    """Blockwise online-softmax attention, O(S * chunk) memory.
+
+    q/k/v [B, H, S, hd] (kv heads pre-broadcast), scaled q expected.
+    The chunk body is rematerialised (jax.checkpoint) so the backward pass
+    recomputes probabilities flash-attention-style instead of saving the
+    [S, S] probability tensor.
+    """
+    B, H, S, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nk = S // chunk
+    kc = k.reshape(B, H, nk, chunk, k.shape[-1])
+    vc = v.reshape(B, H, nk, chunk, v.shape[-1])
+    q_pos = jnp.arange(S)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = inp  # [B,H,chunk,hd] x2, scalar
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_blk,
+                       preferred_element_type=jnp.float32)  # [B,H,S,chunk]
+        k_pos = blk_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, H, S, 1), -1e30, jnp.float32),
+            jnp.zeros((B, H, S, 1), jnp.float32),
+            jnp.zeros((B, H, S, v.shape[-1]), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).astype(q.dtype)
+
+
+def _attn_mask(q_len: int, kv_len: int, window: Optional[int]) -> jax.Array:
+    """Causal (optionally sliding-window) boolean mask [q_len, kv_len]."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    return mask
+
+
+def gqa_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array,
+                       window: Optional[int] = None,
+                       return_kv: bool = False,
+                       use_kernel: bool = False):
+    """Full-sequence GQA attention.
+
+    p: {wq [D, H*hd], wk [D, KVH*hd], wv [D, KVH*hd], wo [H*hd, D],
+        (qk_norm) q_norm [hd], k_norm [hd]}
+    x: [B, S, D]; positions: [B, S] absolute positions.
+    """
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KVH, hd)
+    v = (x @ p["wv"]).reshape(B, S, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)  # [B,S,hd/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        group = H // KVH
+        kb = jnp.repeat(k, group, axis=2)  # broadcast kv heads
+        vb = jnp.repeat(v, group, axis=2)
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), kb.transpose(0, 2, 1, 3),
+            vb.transpose(0, 2, 1, 3), window=window,
+            scale=1.0 / math.sqrt(hd))
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    elif S > CHUNKED_ATTN_THRESHOLD:
+        group = H // KVH
+        kb = jnp.repeat(k, group, axis=2)
+        vb = jnp.repeat(v, group, axis=2)
+        out = chunked_mha(
+            q.transpose(0, 2, 1, 3) * (1.0 / math.sqrt(hd)),
+            kb.transpose(0, 2, 1, 3), vb.transpose(0, 2, 1, 3),
+            window=window, chunk=ATTN_CHUNK)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    else:
+        group = H // KVH
+        qg = q.reshape(B, S, KVH, group, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32)
+        scores *= 1.0 / math.sqrt(hd)
+        mask = _attn_mask(S, S, window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+        out = out.reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged GQA attention — decode (one new token per sequence)
+# ---------------------------------------------------------------------------
+
+def paged_kv_update(pool: jax.Array, block_tables: jax.Array,
+                    slot_positions: jax.Array, new_kv: jax.Array) -> jax.Array:
+    """Write one token's K or V per sequence into the paged pool.
+
+    pool [N_blocks, bs, KVH, hd]; block_tables [B, bp];
+    slot_positions [B] (position within the cache window);
+    new_kv [B, KVH, hd].
+    """
+    bs = pool.shape[1]
+    block_idx = slot_positions // bs
+    offset = slot_positions % bs
+    block_ids = jnp.take_along_axis(block_tables, block_idx[:, None], axis=1)[:, 0]
+    return pool.at[block_ids, offset].set(new_kv)
+
+
+def paged_attention_decode(pool_k: jax.Array, pool_v: jax.Array,
+                           q: jax.Array, block_tables: jax.Array,
+                           cache_lens: jax.Array, scale: float,
+                           use_kernel: bool = False) -> jax.Array:
+    """Decode attention over the paged pool.
+
+    q [B, H, hd]; pools [N_blocks, bs, KVH, hd]; block_tables [B, bp];
+    cache_lens [B] number of valid tokens. Returns [B, H, hd].
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.paged_attention(q, pool_k, pool_v, block_tables,
+                                    cache_lens, scale=scale)
+    B, H, hd = q.shape
+    bs = pool_k.shape[1]
+    KVH = pool_k.shape[2]
+    bp = block_tables.shape[1]
+    # gather this sequence's blocks: [B, bp, bs, KVH, hd] -> [B, S, KVH, hd]
+    k = pool_k[block_tables].reshape(B, bp * bs, KVH, hd)
+    v = pool_v[block_tables].reshape(B, bp * bs, KVH, hd)
+    group = H // KVH
+    qg = q.reshape(B, KVH, group, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(bp * bs)[None, :] < cache_lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
+    return out.reshape(B, H, hd)
+
+
+def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                         positions: jax.Array, cache: dict, layer_slot: int
+                         ) -> tuple:
+    """One-token decode step with paged KV cache for one layer.
+
+    x [B, 1, D]; positions [B]; cache holds k_pool/v_pool slices for THIS
+    layer plus block_tables, cache_lens, window metadata.
+    Returns (out [B,1,D], (new_k_pool, new_v_pool)).
+    """
+    B, _, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, H, hd)
+    k = (x @ p["wk"]).reshape(B, KVH, hd)
+    v = (x @ p["wv"]).reshape(B, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)  # [B, hd/2]
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)  # rope applied at write time
+
+    window_len = cache["window_len"]  # python int: cache capacity (tokens)
+    slot = jnp.where(window_len > 0, positions % window_len, positions)
+    pool_k = paged_kv_update(cache["k_pool"], cache["block_tables"], slot, k)
+    pool_v = paged_kv_update(cache["v_pool"], cache["block_tables"], slot, v)
+    new_lens = jnp.minimum(positions + 1, window_len) if window_len > 0 \
+        else positions + 1
+    out = paged_attention_decode(
+        pool_k, pool_v, q, cache["block_tables"], new_lens,
+        scale=1.0 / math.sqrt(hd), use_kernel=cache.get("use_kernel", False))
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, (pool_k, pool_v)
+
+
+# ---------------------------------------------------------------------------
+# contiguous-cache decode attention — the DISTRIBUTED serving layout
+# ---------------------------------------------------------------------------
+# On the production mesh each data shard owns its sequences' caches as a
+# dense [B_local, capacity, ...] ring buffer: block tables are a host-side
+# per-shard allocator concern (exactly what the engine's BlockManager is),
+# while the device-side step sees a contiguous buffer. This avoids the
+# cross-shard gather a flat global pool would force GSPMD to emit.
+# Semantics (rolling window via slot = pos % capacity) are identical to
+# the flat-pool path — tests assert both against forward_full.
+
+
+def contiguous_kv_update(cache: jax.Array, slot: jax.Array,
+                         new: jax.Array) -> jax.Array:
+    """cache [B, cap, ...]; slot [B]; new [B, ...] -> updated cache."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), slot].set(new)
+
+
+def gqa_attention_decode_contiguous(p: dict, cfg: ModelConfig, x: jax.Array,
+                                    positions: jax.Array, k_cache: jax.Array,
+                                    v_cache: jax.Array, window_len: int
+                                    ) -> tuple:
+    """One-token decode with contiguous per-sequence caches.
+
+    x [B,1,D]; k/v_cache [B, cap, KVH, hd]. Returns (out, new_k, new_v).
+    """
+    B, _, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cap = k_cache.shape[1]
+    q = (x @ p["wq"]).reshape(B, H, hd)
+    k = (x @ p["wk"]).reshape(B, KVH, hd)
+    v = (x @ p["wv"]).reshape(B, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = positions % cap
+    k_cache = contiguous_kv_update(k_cache, slot, k)
+    v_cache = contiguous_kv_update(v_cache, slot, v)
+    lens = jnp.minimum(positions + 1, cap)
+
+    group = H // KVH
+    qg = q.reshape(B, KVH, group, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    valid = jnp.arange(cap)[None, :] < lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def mla_attention_decode_contiguous(p: dict, cfg: ModelConfig, x: jax.Array,
+                                    positions: jax.Array, kv_cache: jax.Array
+                                    ) -> tuple:
+    """Absorbed MLA decode over a contiguous latent cache [B, cap, L+rd]."""
+    B, _, D = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    L = cfg.kv_lora_rank
+    cap = kv_cache.shape[1]
+
+    q_lat = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    kv_a = (x @ p["wkv_a"]).reshape(B, L + rd)
+    c_kv = rms_norm(kv_a[..., :L], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., L:]
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, None], sin[:, None])
+    k_rope = apply_rope(k_rope[:, None, :], cos[:, None], sin[:, None])[:, 0]
+
+    slot = positions % cap
+    entry = jnp.concatenate([c_kv, k_rope], axis=-1)
+    kv_cache = contiguous_kv_update(kv_cache, slot, entry)
+    lens = jnp.minimum(positions + 1, cap)
+
+    wk_b = p["wk_b"].reshape(L, H, nd)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, wk_b)
+    c_seq, kr_seq = kv_cache[..., :L], kv_cache[..., L:]
+    scores = (jnp.einsum("bhl,bsl->bhs", q_abs, c_seq,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope, kr_seq,
+                           preferred_element_type=jnp.float32))
+    scores *= 1.0 / math.sqrt(nd + rd)
+    valid = jnp.arange(cap)[None, :] < lens[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_seq)
+    wv_b = p["wv_b"].reshape(L, H, vd)
+    out = jnp.einsum("bhl,lhd->bhd", o_lat, wv_b).reshape(B, 1, H * vd)
+    return out @ p["wo"], kv_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                    enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """x [B, S, D]; enc_k/enc_v [B, T, KVH, hd] precomputed at prefill."""
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    group = H // KVH
+    qg = q.reshape(B, S, KVH, group, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, enc_k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs, enc_v).reshape(B, S, H * hd)
+    return out @ p["wo"]
+
+
+def cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    B, T, D = enc_out.shape
+    KVH, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, KVH, hd)
+    v = (enc_out @ p["wv"]).reshape(B, T, KVH, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array, return_kv: bool = False):
+    """Full-sequence MLA (train / prefill).
+
+    p: {wq_a [D, q_lora], wq_b [q_lora, H*(nope+rope)],
+        wkv_a [D, kv_lora + rope], wk_b [kv_lora, H*nope],
+        wv_b [kv_lora, H*v], wo [H*v, D],
+        q_a_norm [q_lora], kv_a_norm [kv_lora]}
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_lat = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    kv_a = x @ p["wkv_a"]  # [B,S,kv_lora+rd]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:]  # [B,S,rd] shared across heads
+
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None], sin[:, :, None])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None],
+                        sin[:, :, None])[:, :, 0]
+
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, nd)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, H, vd)
+
+    scale = 1.0 / math.sqrt(nd + rd)
+    if S > CHUNKED_ATTN_THRESHOLD:
+        # fold the shared roped key into per-head keys and run the
+        # chunked online-softmax path (what lowers at 32k)
+        qh = jnp.concatenate([q_nope, q_rope], axis=-1) * scale
+        kh = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, rd))],
+            axis=-1)
+        out = chunked_mha(qh.transpose(0, 2, 1, 3),
+                          kh.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), chunk=ATTN_CHUNK)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vd)
+    else:
+        s_nope = jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                            preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        mask = _attn_mask(S, S, None)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(B, S, H * vd)
+    out = out @ p["wo"]
+    if return_kv:
+        # paged-cache entry = [compressed latent | roped shared key]
+        return out, jnp.concatenate([c_kv, k_rope], axis=-1)
+    return out
+
+
+def mla_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                         positions: jax.Array, cache: dict) -> tuple:
+    """Absorbed-weight MLA decode over the paged latent cache.
+
+    Cache stores [latent (kv_lora) | roped k (rd)] per token:
+    kv_pool [N_blocks, bs, kv_lora + rd].
+
+    The absorption trick (beyond-paper TPU adaptation, also used by
+    DeepSeek's own inference): fold W_uk into q and W_uv into the output
+    so attention runs directly in the latent space — no per-head K/V
+    materialisation at 32k/500k context.
+    """
+    B, _, D = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    L = cfg.kv_lora_rank
+
+    q_lat = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    kv_a = (x @ p["wkv_a"]).reshape(B, L + rd)
+    c_kv = rms_norm(kv_a[..., :L], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., L:]
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, None], sin[:, None])
+    k_rope = apply_rope(k_rope[:, None, :], cos[:, None], sin[:, None])[:, 0]
+
+    window_len = cache["window_len"]
+    slot = jnp.where(window_len > 0, positions % window_len, positions)
+    new_entry = jnp.concatenate([c_kv, k_rope], axis=-1)  # [B, L+rd]
+    pool = paged_kv_update(cache["kv_pool"][:, :, None, :],
+                           cache["block_tables"], slot,
+                           new_entry[:, None, :])[:, :, 0, :]
+    new_lens = jnp.minimum(positions + 1, window_len) if window_len > 0 \
+        else positions + 1
+
+    # absorb W_uk: q_abs [B,H,L]
+    wk_b = p["wk_b"].reshape(L, H, nd)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, wk_b)
+
+    bs = pool.shape[1]
+    bp = cache["block_tables"].shape[1]
+    entries = pool[cache["block_tables"]].reshape(B, bp * bs, L + rd)
+    c_seq, kr_seq = entries[..., :L], entries[..., L:]
+    scores = (jnp.einsum("bhl,bsl->bhs", q_abs, c_seq,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope, kr_seq,
+                           preferred_element_type=jnp.float32))
+    scores *= 1.0 / math.sqrt(nd + rd)
+    valid = jnp.arange(bp * bs)[None, :] < new_lens[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_seq)  # [B,H,L]
+    wv_b = p["wv_b"].reshape(L, H, vd)
+    out = jnp.einsum("bhl,lhd->bhd", o_lat, wv_b).reshape(B, 1, H * vd)
+    return out @ p["wo"], pool
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k router, capacity-based dispatch/combine)
+# ---------------------------------------------------------------------------
+
+MOE_CHUNK_TOKENS = 524288
+
+
+def _moe_group_size(T: int, E: int) -> int:
+    """GShard-style dispatch groups: the [G, Tg, E, C] one-hot dispatch
+    tensor is quadratic in group size, so production configs use many
+    small groups. Tg ~ 256 keeps the tensor O(GB) even at E=160,
+    T=1M (train_4k); tiny inputs use a single group."""
+    target = 256 if E >= 32 else 1024
+    gs = min(T, target)
+    while T % gs:
+        gs -= 1
+    return gs
+
+
+def moe_layer(p: dict, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: float = None,
+              expert_weight_spec=None,
+              ex_in_spec=None) -> tuple:
+    """Top-k MoE with shared experts (DeepSeek-style when configured),
+    group-wise capacity dispatch (GShard/Switch semantics).
+
+    p: {router [D, E],
+        experts {w_gate [E, D, F], w_up [E, D, F], w_down [E, F, D]},
+        (optional) shared {w_gate [D, F*n_sh], w_up, w_down}}
+    Returns (out, aux_loss).
+
+    ``expert_weight_spec``: optional PartitionSpec the expert weights are
+    constrained to BEFORE the group-chunk scan. Under FSDP the weights
+    arrive data-sharded; without this hoist, GSPMD re-all-gathers them on
+    EVERY chunk iteration (measured: 4.9 TB/device/step for mixtral
+    train_4k — the dominant collective term). Constraining to the
+    fsdp-free spec materialises one gathered copy per layer instead.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, D)
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    if expert_weight_spec is not None:
+        p = dict(p)
+        p["experts"] = {
+            k: jax.lax.with_sharding_constraint(v, expert_weight_spec[k])
+            for k, v in p["experts"].items()
+        }
+
+    gates = jax.nn.softmax((xt @ p["router"]).astype(jnp.float32), axis=-1)
+    weights, sel = jax.lax.top_k(gates, K)  # [T,K]
+    weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(sel, E, dtype=jnp.float32), axis=1), axis=0)
+    aux_loss = E * jnp.sum(me * ce)
+
+    gs = _moe_group_size(T, E)
+    G = T // gs
+    capacity = max(1, int(capacity_factor * gs * K / E))
+    xg = xt.reshape(G, gs, D)
+    sel_g = sel.reshape(G, gs, K)
+    w_g = weights.reshape(G, gs, K)
+    pe = p["experts"]
+
+    def groups_block(xg_c, sel_c, w_c):
+        """Dispatch+expert-ffn+combine for a slice of groups.
+
+        Bounds the live [Gc, E, C, *] dispatch buffers — at 1M tokens the
+        full-G expert intermediates are tens of GB per layer.
+        """
+        # position of each (token, k) within its expert queue, per group
+        sel_onehot = jax.nn.one_hot(sel_c, E, dtype=jnp.int32)  # [Gc,gs,K,E]
+        Gc = sel_c.shape[0]
+        flat = sel_onehot.reshape(Gc, gs * K, E)
+        pos_in_expert = (jnp.cumsum(flat, axis=1) - flat) \
+            .reshape(Gc, gs, K, E)
+        pos = jnp.sum(pos_in_expert * sel_onehot, axis=-1)  # [Gc,gs,K]
+        keep = pos < capacity
+
+        disp = (sel_onehot.astype(jnp.bool_)
+                & keep[..., None]).astype(xt.dtype)  # [Gc,gs,K,E]
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                                capacity + 1,
+                                dtype=xt.dtype)[..., :capacity]
+        dispatch = jnp.einsum("gtke,gtkc->gtec", disp, pos_oh)
+        combine = jnp.einsum("gtke,gtkc,gtk->gtec", disp, pos_oh,
+                             w_c.astype(xt.dtype))
+
+        ex_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg_c)  # [Gc,E,C,D]
+        if ex_in_spec is not None:
+            # DECODE expert parallelism: dispatched activations are tiny
+            # (tokens*topk*D ~ MB) while FSDP-sharded expert weights are
+            # tens of GB; resharding ex_in to the weights' (E-model,
+            # D-data) layout makes GSPMD move activations and leave the
+            # weights stationary (partial-sum matmul + small all-reduce)
+            # instead of all-gathering the weights every step.
+            ex_in = jax.lax.with_sharding_constraint(ex_in, ex_in_spec)
+        g_ = jnp.einsum("gecd,edf->gecf", ex_in, pe["w_gate"])
+        u = jnp.einsum("gecd,edf->gecf", ex_in, pe["w_up"])
+        act = jax.nn.silu(g_.astype(jnp.float32)).astype(xt.dtype) * u
+        ex_out = jnp.einsum("gecf,efd->gecd", act, pe["w_down"])
+        return jnp.einsum("gtec,gecd->gtd", combine, ex_out)
+
+    # tokens of expert compute live at once; larger chunks amortise the
+    # FSDP weight all-gather inside the chunk scan (iteration 2 of the
+    # mixtral train_4k hillclimb: 64k -> 256k cut collective time 2.4x)
+    chunk_groups = max(1, (MOE_CHUNK_TOKENS + gs - 1) // gs)
+    if G > chunk_groups:
+        while G % chunk_groups:
+            chunk_groups -= 1
+        nc = G // chunk_groups
+
+        @jax.checkpoint
+        def body(_, inp):
+            xg_c, sel_c, w_c = inp
+            return None, groups_block(xg_c, sel_c, w_c)
+
+        _, out = jax.lax.scan(
+            body, None,
+            (xg.reshape(nc, chunk_groups, gs, D),
+             sel_g.reshape(nc, chunk_groups, gs, K),
+             w_g.reshape(nc, chunk_groups, gs, K)))
+        out = out.reshape(T, D)
+    else:
+        out = groups_block(xg, sel_g, w_g).reshape(T, D)
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(p["shared"], xt)
+    return out.reshape(B, S, D), aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — chunked full-sequence + single-step decode
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} a[..., k]."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                use_kernel: bool = False):
+    """SSD (state-space duality) scan, chunked.
+
+    x  [B, S, H, P]   (P = head dim)
+    dt [B, S, H]      (softplus'd step sizes)
+    A  [H]            (negative decay rates)
+    Bm [B, S, N], Cm [B, S, N]  (shared across heads, ngroups=1)
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                             initial_state=initial_state)
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]  # [B,nc,l,H]
+    dA = jnp.moveaxis(dA, -1, 2)  # [B,nc,H,l]
+    dA_cumsum = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA))  # [B,nc,H,l,l]
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)[:, :, None] * L
+    y_diag = jnp.einsum("bchls,bcsh,bcshp->bclhp", scores, dtc, xc)
+
+    # 2. chunk states
+    decay_states = jnp.exp(dA_cumsum[..., -1:] - dA_cumsum)  # [B,nc,H,l]
+    states = jnp.einsum("bcln,bchl,bclh,bclhp->bchpn",
+                        Bc, decay_states, dtc, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cumsum[..., -1])  # [B,nc,H]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), dtype=states.dtype)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    final_state, h_prev = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B,nc,H,P,N] state BEFORE chunk
+
+    # 4. state -> output contribution
+    state_decay = jnp.exp(dA_cumsum)  # [B,nc,H,l]
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cc, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, Bm: jax.Array, Cm: jax.Array):
+    """Single-token SSD recurrence.
+
+    state [B,H,P,N]; x [B,H,P]; dt [B,H]; A [H]; Bm/Cm [B,N].
+    Returns (y [B,H,P], new_state).
+    """
+    dA = jnp.exp(dt * A[None, :])  # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm)
+    return y, new_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; b [C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def causal_conv1d_step(conv_state: jax.Array, x_t: jax.Array,
+                       w: jax.Array, b: jax.Array):
+    """conv_state [B, W-1, C]; x_t [B, C]. Returns (y [B,C], new_state)."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", full, w) + b[None, :]
+    return y, full[:, 1:, :]
+
+
+def mamba2_mixer_full(p: dict, cfg: ModelConfig, x: jax.Array,
+                      use_kernel: bool = False, return_state: bool = False):
+    """Full-sequence Mamba2 mixer.
+
+    p: {w_in [D, d_inner*2 + 2N + H], conv_w [W, d_inner+2N], conv_b,
+        A_log [H], D [H], dt_bias [H], norm_w [d_inner], w_out [d_inner, D]}
+    With return_state, also returns (ssm_state [B,H,P,N],
+    conv_state [B,W-1,di+2N]) for decode continuation.
+    """
+    B, S, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state_size, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xbc_raw = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]  # [B,S,H]
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    chunk = min(cfg.ssm_chunk_size, S)
+    pad = (-S) % chunk
+    xs_f = xs.astype(jnp.float32)
+    Bm_f, Cm_f = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    if pad:
+        # dt=0 on padding keeps the state exactly (decay 1, input 0)
+        xs_f = jnp.pad(xs_f, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm_f = jnp.pad(Bm_f, ((0, 0), (0, pad), (0, 0)))
+        Cm_f = jnp.pad(Cm_f, ((0, 0), (0, pad), (0, 0)))
+    else:
+        dt_p = dt
+    y, final_state = ssd_chunked(xs_f, dt_p, A, Bm_f, Cm_f, chunk=chunk,
+                                 use_kernel=use_kernel)
+    y = y[:, :S]
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        W = cfg.ssm_conv_width
+        conv_state = xbc_raw[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, final_state, conv_state.astype(x.dtype)
+    return out
+
+
+def mamba2_mixer_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                        ssm_state: jax.Array, conv_state: jax.Array):
+    """One-token Mamba2 step. x [B,1,D]. Returns (out, new_ssm, new_conv)."""
+    B, _, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state_size, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = (x[:, 0] @ p["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    xbc, new_conv = causal_conv1d_step(conv_state, xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(B, H, P)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(
+        ssm_state, xs.astype(jnp.float32), dt, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    return (y @ p["w_out"])[:, None, :], new_state, new_conv

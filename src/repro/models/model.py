@@ -1,0 +1,628 @@
+"""Architecture-dispatching forward passes.
+
+Three entry points, shared by training, serving and the dry-run launcher:
+
+  forward_full(...)  — full-sequence forward (train / prefill), scan over
+                       stacked layer params.
+  decode_step(...)   — one-token decode against the paged KV cache; also
+                       returns the last hidden state so the STEP scorer can
+                       run fused with generation.
+  encode(...)        — encoder stack for enc-dec archs (stub frontend
+                       embeddings in, memory out).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.init import padded_vocab
+
+
+def _embed(params, cfg, tokens):
+    return params["embed"][tokens]
+
+
+def _wsc_kv(kv_specs, key, x):
+    # Constrain a per-layer KV/state tensor to its launcher-provided
+    # PartitionSpec (no-op outside the distributed launch path).
+    if kv_specs is None or key not in kv_specs or x is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, kv_specs[key])
+
+
+def _logits(params, cfg, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec archs; consumes stub frontend embeddings)
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, cfg: ModelConfig, encoder_embeds: jax.Array,
+           remat: bool = False, act_spec=None) -> jax.Array:
+    h = encoder_embeds
+    B, T, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def wsc(x):
+        if act_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act_spec)
+
+    def body(h, lp):
+        a = L.gqa_attention_full(lp["attn"], cfg,
+                                 L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                 positions, window=None)
+        h = h + a
+        m = L.swiglu(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return wsc(h + m), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, wsc(h), params["encoder"])
+    return L.rms_norm(h, params["encoder_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward_full(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 modality_embeds: Optional[jax.Array] = None,
+                 encoder_embeds: Optional[jax.Array] = None,
+                 use_kernel: bool = False,
+                 return_kv: bool = False,
+                 remat: bool = False,
+                 act_spec=None,
+                 kv_specs=None) -> dict:
+    """Returns {logits, hidden, aux_loss[, kvs]}.
+
+    ``remat=True`` checkpoints each layer body (save only the residual
+    stream per layer; recompute attention/ffn intermediates in backward) —
+    required for the train_4k activations to fit HBM at full scale.
+
+    ``act_spec`` (PartitionSpec for [B, S, D]) pins the residual-stream
+    sharding between layers: the rematerialised per-layer carries are the
+    dominant training activation term, and without an explicit constraint
+    GSPMD leaves them replicated over the model axis (16x the bytes)."""
+    B, S = tokens.shape
+
+    def wsc(x):
+        if act_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act_spec)
+
+    h = wsc(_embed(params, cfg, tokens))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.modality == "vision" and modality_embeds is not None:
+        n = modality_embeds.shape[1]
+        h = jnp.concatenate(
+            [modality_embeds.astype(h.dtype), h[:, n:]], axis=1)
+
+    window = cfg.sliding_window
+
+    if cfg.arch_type == "ssm":
+        def body(h, lp):
+            x_in = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+            if return_kv:
+                out, ss, cs = L.mamba2_mixer_full(
+                    lp["mixer"], cfg, x_in, use_kernel=use_kernel,
+                    return_state=True)
+                return wsc(h + out), (_wsc_kv(kv_specs, "ssm", ss),
+                                      _wsc_kv(kv_specs, "conv", cs))
+            out = L.mamba2_mixer_full(lp["mixer"], cfg, x_in,
+                                      use_kernel=use_kernel)
+            return wsc(h + out), None
+        if remat:
+            body = jax.checkpoint(body)
+        h, kvs = jax.lax.scan(body, h, params["layers"])
+
+    elif cfg.arch_type == "hybrid":
+        sa = params["shared_attn"]
+
+        def group_body(h, gp):
+            def layer_body(h, lp):
+                x_in = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+                if return_kv:
+                    out, ss, cs = L.mamba2_mixer_full(
+                        lp["mixer"], cfg, x_in, use_kernel=use_kernel,
+                        return_state=True)
+                    return h + out, (_wsc_kv(kv_specs, "ssm", ss),
+                                     _wsc_kv(kv_specs, "conv", cs))
+                out = L.mamba2_mixer_full(lp["mixer"], cfg, x_in,
+                                          use_kernel=use_kernel)
+                return h + out, None
+            if remat:
+                layer_body = jax.checkpoint(layer_body)
+            h, states = jax.lax.scan(layer_body, h, gp)
+            a_in = L.rms_norm(h, sa["ln1"], cfg.norm_eps)
+            if return_kv:
+                a, kv = L.gqa_attention_full(sa["attn"], cfg, a_in, positions,
+                                             window=window, return_kv=True,
+                                             use_kernel=use_kernel)
+                kv = (_wsc_kv(kv_specs, "kv", kv[0]),
+                      _wsc_kv(kv_specs, "kv", kv[1]))
+            else:
+                a = L.gqa_attention_full(sa["attn"], cfg, a_in, positions,
+                                         window=window,
+                                         use_kernel=use_kernel)
+                kv = None
+            h = h + a
+            h = h + L.swiglu(sa["mlp"], L.rms_norm(h, sa["ln2"], cfg.norm_eps))
+            return wsc(h), (states, kv) if return_kv else None
+
+        if remat:
+            group_body = jax.checkpoint(group_body)
+        h, kvs = jax.lax.scan(group_body, h, params["layers"])
+
+    else:  # dense / moe / vlm / enc-dec decoder
+        enc_kv = None
+        if cfg.is_encoder_decoder:
+            assert encoder_embeds is not None
+            enc_out = encode(params, cfg, encoder_embeds,
+                             remat=remat, act_spec=act_spec)
+
+        def body(carry, lp):
+            h, aux = carry
+            a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla and return_kv:
+                a, kv = L.mla_attention_full(lp["attn"], cfg, a_in, positions,
+                                             return_kv=True)
+                kv = _wsc_kv(kv_specs, "mla", kv)
+            elif cfg.use_mla:
+                a = L.mla_attention_full(lp["attn"], cfg, a_in, positions)
+                kv = None
+            elif return_kv:
+                a, kv = L.gqa_attention_full(lp["attn"], cfg, a_in, positions,
+                                             window=window, return_kv=True,
+                                             use_kernel=use_kernel)
+                kv = (_wsc_kv(kv_specs, "kv", kv[0]),
+                      _wsc_kv(kv_specs, "kv", kv[1]))
+            else:
+                a = L.gqa_attention_full(lp["attn"], cfg, a_in, positions,
+                                         window=window,
+                                         use_kernel=use_kernel)
+                kv = None
+            h = h + a
+            if cfg.is_encoder_decoder:
+                c = L.cross_attention(
+                    lp["cross"], cfg,
+                    L.rms_norm(h, lp["ln_cross"], cfg.norm_eps),
+                    *L.cross_kv(lp["cross"], cfg, enc_out))
+                h = h + c
+            m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.uses_moe:
+                m, aux_l = L.moe_layer(
+                    lp["moe"], cfg, m_in,
+                    expert_weight_spec=None if kv_specs is None
+                    else kv_specs.get("moe_experts"))
+                aux = aux + aux_l
+            else:
+                m = L.swiglu(lp["mlp"], m_in)
+            return (wsc(h + m), aux), kv
+
+        if remat:
+            body = jax.checkpoint(body)
+        (h, aux_total), kvs = jax.lax.scan(
+            body, (h, aux_total), params["layers"])
+
+    hidden = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, hidden)
+    out = {"logits": logits, "hidden": hidden, "aux_loss": aux_total}
+    if return_kv:
+        out["kvs"] = kvs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one-token decode against the paged cache
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                positions: jax.Array, cache: dict, window_len: int,
+                use_kernel: bool = False) -> dict:
+    """tokens [B,1]; positions [B]; cache per kv_cache_specs.
+
+    window_len: static cache capacity in tokens (rolling buffer when the
+    sequence outgrows it). Returns {logits [B,V], hidden [B,D], cache}.
+    """
+    B = tokens.shape[0]
+    h = _embed(params, cfg, tokens)  # [B,1,D]
+    new_cache = dict(cache)
+
+    if cfg.arch_type == "ssm":
+        def body(h, xs):
+            lp, sstate, cstate = xs
+            out, ns, nc = L.mamba2_mixer_decode(
+                lp["mixer"], cfg,
+                L.rms_norm(h, lp["norm"], cfg.norm_eps), sstate, cstate)
+            return h + out, (ns, nc)
+        h, (ns, ncv) = jax.lax.scan(
+            body, h, (params["layers"], cache["ssm_state"],
+                      cache["conv_state"]))
+        new_cache["ssm_state"], new_cache["conv_state"] = ns, ncv
+
+    elif cfg.arch_type == "hybrid":
+        sa = params["shared_attn"]
+
+        def group_body(h, xs):
+            gp, sstate, cstate, k_pool, v_pool = xs
+
+            def layer_body(h, lxs):
+                lp, ss, cs = lxs
+                out, ns, nc = L.mamba2_mixer_decode(
+                    lp["mixer"], cfg,
+                    L.rms_norm(h, lp["norm"], cfg.norm_eps), ss, cs)
+                return h + out, (ns, nc)
+            h, (ns, ncv) = jax.lax.scan(layer_body, h, (gp, sstate, cstate))
+            a_in = L.rms_norm(h, sa["ln1"], cfg.norm_eps)
+            a, (nk, nv) = L.gqa_attention_decode(
+                sa["attn"], cfg, a_in, positions,
+                {"k_pool": k_pool, "v_pool": v_pool,
+                 "block_tables": cache["block_tables"],
+                 "window_len": window_len, "use_kernel": use_kernel}, 0)
+            h = h + a
+            h = h + L.swiglu(sa["mlp"], L.rms_norm(h, sa["ln2"], cfg.norm_eps))
+            return h, (ns, ncv, nk, nv)
+
+        # ssm_state is stacked [n_ssm, ...] = [G*per, ...]; regroup
+        G = cfg.num_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every
+        ss = cache["ssm_state"].reshape(G, per, *cache["ssm_state"].shape[1:])
+        cs = cache["conv_state"].reshape(G, per, *cache["conv_state"].shape[1:])
+        h, (ns, ncv, nk, nv) = jax.lax.scan(
+            group_body, h,
+            (params["layers"], ss, cs, cache["k_pool"], cache["v_pool"]))
+        new_cache["ssm_state"] = ns.reshape(-1, *ns.shape[2:])
+        new_cache["conv_state"] = ncv.reshape(-1, *ncv.shape[2:])
+        new_cache["k_pool"], new_cache["v_pool"] = nk, nv
+
+    else:  # dense / moe / vlm / enc-dec decoder
+        has_cross = cfg.is_encoder_decoder
+
+        def body(h, xs):
+            if cfg.use_mla:
+                lp, kv_pool = xs[0], xs[1]
+                cross = xs[2:] if has_cross else None
+            else:
+                lp, k_pool, v_pool = xs[0], xs[1], xs[2]
+                cross = xs[3:] if has_cross else None
+            a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, new_pool = L.mla_attention_decode(
+                    lp["attn"], cfg, a_in, positions,
+                    {"kv_pool": kv_pool,
+                     "block_tables": cache["block_tables"],
+                     "window_len": window_len})
+                out_pools = (new_pool,)
+            else:
+                a, (nk, nv) = L.gqa_attention_decode(
+                    lp["attn"], cfg, a_in, positions,
+                    {"k_pool": k_pool, "v_pool": v_pool,
+                     "block_tables": cache["block_tables"],
+                     "window_len": window_len, "use_kernel": use_kernel}, 0)
+                out_pools = (nk, nv)
+            h = h + a
+            if has_cross:
+                ck, cv = cross
+                c = L.cross_attention(
+                    lp["cross"], cfg,
+                    L.rms_norm(h, lp["ln_cross"], cfg.norm_eps), ck, cv)
+                h = h + c
+            m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.uses_moe:
+                m, _ = L.moe_layer(lp["moe"], cfg, m_in)
+            else:
+                m = L.swiglu(lp["mlp"], m_in)
+            return h + m, out_pools
+
+        if cfg.use_mla:
+            xs = (params["layers"], cache["kv_pool"])
+        else:
+            xs = (params["layers"], cache["k_pool"], cache["v_pool"])
+        if has_cross:
+            xs = xs + (cache["cross_k"], cache["cross_v"])
+        h, out_pools = jax.lax.scan(body, h, xs)
+        if cfg.use_mla:
+            new_cache["kv_pool"] = out_pools[0]
+        else:
+            new_cache["k_pool"], new_cache["v_pool"] = out_pools
+
+    hidden = L.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)  # [B,D]
+    logits = _logits(params, cfg, hidden)
+    return {"logits": logits, "hidden": hidden, "cache": new_cache}
+
+
+# ---------------------------------------------------------------------------
+# distributed serve step — contiguous per-sequence caches (see layers.py:
+# "contiguous-cache decode attention"); this is the step the multi-pod
+# dry-run lowers for the decode shapes.
+# ---------------------------------------------------------------------------
+
+def serve_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      positions: jax.Array, cache: dict,
+                      kv_specs=None) -> dict:
+    """tokens [B,1]; positions [B]; cache per kv_cache_specs (contiguous):
+      k_cache/v_cache [L*, B, cap, KVH, hd]  (or kv_cache for MLA)
+      ssm_state/conv_state as in decode_step; cross_k/cross_v for enc-dec.
+    Returns {logits [B,V], hidden [B,D], cache}.
+    """
+    B = tokens.shape[0]
+    h = _embed(params, cfg, tokens)
+    new_cache = dict(cache)
+
+    if cfg.arch_type == "ssm":
+        def body(h, xs):
+            lp, sstate, cstate = xs
+            out, ns, nc = L.mamba2_mixer_decode(
+                lp["mixer"], cfg,
+                L.rms_norm(h, lp["norm"], cfg.norm_eps), sstate, cstate)
+            return h + out, (_wsc_kv(kv_specs, "ssm", ns),
+                             _wsc_kv(kv_specs, "conv", nc))
+        h, (ns, ncv) = jax.lax.scan(
+            body, h, (params["layers"], cache["ssm_state"],
+                      cache["conv_state"]))
+        new_cache["ssm_state"], new_cache["conv_state"] = ns, ncv
+
+    elif cfg.arch_type == "hybrid":
+        sa = params["shared_attn"]
+
+        def group_body(h, xs):
+            gp, sstate, cstate, kc, vc = xs
+
+            def layer_body(h, lxs):
+                lp, ss, cs = lxs
+                out, ns, nc = L.mamba2_mixer_decode(
+                    lp["mixer"], cfg,
+                    L.rms_norm(h, lp["norm"], cfg.norm_eps), ss, cs)
+                return h + out, (_wsc_kv(kv_specs, "ssm", ns),
+                                 _wsc_kv(kv_specs, "conv", nc))
+            h, (ns, ncv) = jax.lax.scan(layer_body, h, (gp, sstate, cstate))
+            a_in = L.rms_norm(h, sa["ln1"], cfg.norm_eps)
+            a, nk, nv = L.gqa_attention_decode_contiguous(
+                sa["attn"], cfg, a_in, positions, kc, vc,
+                window_len=kc.shape[1])
+            nk = _wsc_kv(kv_specs, "kv", nk)
+            nv = _wsc_kv(kv_specs, "kv", nv)
+            h = h + a
+            h = h + L.swiglu(sa["mlp"], L.rms_norm(h, sa["ln2"], cfg.norm_eps))
+            return h, (ns, ncv, nk, nv)
+
+        G = cfg.num_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every
+        ss = cache["ssm_state"].reshape(G, per, *cache["ssm_state"].shape[1:])
+        cs = cache["conv_state"].reshape(G, per, *cache["conv_state"].shape[1:])
+        h, (ns, ncv, nk, nv) = jax.lax.scan(
+            group_body, h,
+            (params["layers"], ss, cs, cache["k_cache"], cache["v_cache"]))
+        new_cache["ssm_state"] = ns.reshape(-1, *ns.shape[2:])
+        new_cache["conv_state"] = ncv.reshape(-1, *ncv.shape[2:])
+        new_cache["k_cache"], new_cache["v_cache"] = nk, nv
+
+    else:  # dense / moe / vlm / enc-dec decoder
+        has_cross = cfg.is_encoder_decoder
+
+        def body(h, xs):
+            if cfg.use_mla:
+                lp, kv_cache = xs[0], xs[1]
+                cross = xs[2:] if has_cross else None
+            else:
+                lp, kc, vc = xs[0], xs[1], xs[2]
+                cross = xs[3:] if has_cross else None
+            a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, new_kv = L.mla_attention_decode_contiguous(
+                    lp["attn"], cfg, a_in, positions, kv_cache)
+                out_caches = (_wsc_kv(kv_specs, "mla", new_kv),)
+            else:
+                a, nk, nv = L.gqa_attention_decode_contiguous(
+                    lp["attn"], cfg, a_in, positions, kc, vc,
+                    window_len=kc.shape[1])
+                out_caches = (_wsc_kv(kv_specs, "kv", nk),
+                              _wsc_kv(kv_specs, "kv", nv))
+            h = h + a
+            if has_cross:
+                ck, cv = cross
+                c = L.cross_attention(
+                    lp["cross"], cfg,
+                    L.rms_norm(h, lp["ln_cross"], cfg.norm_eps), ck, cv)
+                h = h + c
+            m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.uses_moe:
+                m, _ = L.moe_layer(
+                    lp["moe"], cfg, m_in,
+                    expert_weight_spec=None if kv_specs is None
+                    else kv_specs.get("moe_experts"),
+                    ex_in_spec=None if kv_specs is None
+                    else kv_specs.get("moe_ex_in"))
+            else:
+                m = L.swiglu(lp["mlp"], m_in)
+            return h + m, out_caches
+
+        if cfg.use_mla:
+            xs = (params["layers"], cache["kv_cache"])
+        else:
+            xs = (params["layers"], cache["k_cache"], cache["v_cache"])
+        if has_cross:
+            xs = xs + (cache["cross_k"], cache["cross_v"])
+        h, out_caches = jax.lax.scan(body, h, xs)
+        if cfg.use_mla:
+            new_cache["kv_cache"] = out_caches[0]
+        else:
+            new_cache["k_cache"], new_cache["v_cache"] = out_caches
+
+    hidden = L.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, hidden)
+    return {"logits": logits, "hidden": hidden, "cache": new_cache}
+
+
+# ---------------------------------------------------------------------------
+# cache construction / prefill population (serving engine path)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int,
+                      num_blocks: Optional[int] = None,
+                      encoder_len: Optional[int] = None) -> dict:
+    """Zeroed decode cache. ``capacity`` = per-sequence token capacity
+    (the window). ``num_blocks`` sizes the shared pool; defaults to
+    batch * blocks_per_seq (dedicated blocks)."""
+    bs = cfg.kv_block_size
+    bp = -(-capacity // bs)
+    nb = num_blocks if num_blocks is not None else batch * bp
+    attn = cfg.attention_layer_ids()
+    dt = jnp.bfloat16
+    cache: dict = {}
+    if attn:
+        la = len(attn)
+        if cfg.use_mla:
+            cache["kv_pool"] = jnp.zeros(
+                (la, nb, bs, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dt)
+        else:
+            cache["k_pool"] = jnp.zeros(
+                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), dt)
+            cache["v_pool"] = jnp.zeros(
+                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), dt)
+        # default: sequence b owns blocks [b*bp, (b+1)*bp)
+        cache["block_tables"] = (
+            jnp.arange(batch * bp, dtype=jnp.int32).reshape(batch, bp)
+            % max(nb, 1))
+    if cfg.arch_type in ("ssm", "hybrid"):
+        cache["ssm_state"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+             cfg.ssm_state_size), jnp.float32)
+        cache["conv_state"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+             cfg.d_inner + 2 * cfg.ssm_state_size), dt)
+    if cfg.is_encoder_decoder:
+        T = encoder_len or cfg.encoder_seq_len or 1024
+        la = len(attn)
+        cache["cross_k"] = jnp.zeros(
+            (la, batch, T, cfg.num_kv_heads, cfg.head_dim), dt)
+        cache["cross_v"] = jnp.zeros(
+            (la, batch, T, cfg.num_kv_heads, cfg.head_dim), dt)
+    return cache
+
+
+def build_cross_cache(params: dict, cfg: ModelConfig, enc_out: jax.Array):
+    """Compute per-decoder-layer cross-attention K/V from encoder output."""
+    def body(_, lp):
+        k, v = L.cross_kv(lp["cross"], cfg, enc_out)
+        return None, (k, v)
+    _, (ck, cv) = jax.lax.scan(body, None, params["layers"])
+    return ck, cv
+
+
+def write_prefill_kv(cfg: ModelConfig, cache: dict, kvs,
+                     seq_lens: jax.Array) -> dict:
+    """Scatter prefill K/V (from forward_full(return_kv=True)) into the
+    paged pools. Assumes prompt_len <= capacity (slot = position)."""
+    cache = dict(cache)
+    bt = cache.get("block_tables")
+    bs = cfg.kv_block_size
+
+    def scatter(pool, values):
+        # pool [L*, NB, bs, ...]; values [L*, B, S, ...]
+        Bn, S = values.shape[1], values.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (Bn, S))
+        block_ids = jnp.take_along_axis(bt, pos // bs, axis=1)  # [B,S]
+        offs = pos % bs
+        valid = pos < seq_lens[:, None]
+        # route invalid writes to a scratch copy of position 0 write? use
+        # where on values and clamp ids; overwriting beyond len is harmless
+        # because attention masks by cache_lens.
+        vals = jnp.moveaxis(values, 0, 2)  # [B,S,L*,...] -> scatter per B,S
+        pool_t = jnp.moveaxis(pool, 0, 2)  # [NB,bs,L*,...]
+        pool_t = pool_t.at[block_ids, offs].set(vals)
+        return jnp.moveaxis(pool_t, 2, 0)
+
+    if cfg.arch_type == "ssm":
+        ss, cs = kvs
+        cache["ssm_state"], cache["conv_state"] = ss, cs
+        return cache
+    if cfg.arch_type == "hybrid":
+        (ss, cs), (k, v) = kvs
+        cache["ssm_state"] = ss.reshape(-1, *ss.shape[2:])
+        cache["conv_state"] = cs.reshape(-1, *cs.shape[2:])
+        cache["k_pool"] = scatter(cache["k_pool"], k)
+        cache["v_pool"] = scatter(cache["v_pool"], v)
+        return cache
+    if cfg.use_mla:
+        cache["kv_pool"] = scatter(cache["kv_pool"][:, :, :, None, :],
+                                   kvs[:, :, :, None, :])[:, :, :, 0, :]
+        return cache
+    k, v = kvs
+    cache["k_pool"] = scatter(cache["k_pool"], k)
+    cache["v_pool"] = scatter(cache["v_pool"], v)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+# Above this token count the [B, S, V] fp32 logits (plus softmax
+# temporaries) dominate training HBM — e.g. 622 GB global for qwen3's
+# 152k vocab at train_4k. The loss then switches to a sequence-chunked
+# rematerialised cross-entropy: per-chunk logits are recomputed in the
+# backward pass, so only the [B, S, D] hidden survives.
+CHUNKED_CE_THRESHOLD = 1024
+CE_CHUNK = 256
+
+
+def _chunked_ce(hidden: jax.Array, w: jax.Array, labels: jax.Array,
+                valid: jax.Array, chunk: int) -> tuple:
+    """hidden [B,S,D]; w [D,V]; labels/valid [B,S]. Returns (nll_sum, n)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, nc, chunk, D), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(valid.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h_c, y_c, m_c = inp
+        logits = (h_c @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.where(m_c, y_c, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m_c
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys, ms))
+    return total
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, aux_weight: float = 0.01,
+            use_kernel: bool = False,
+            modality_embeds: Optional[jax.Array] = None,
+            encoder_embeds: Optional[jax.Array] = None,
+            remat: bool = False, act_spec=None,
+            kv_specs=None) -> jax.Array:
+    out = forward_full(params, cfg, tokens, use_kernel=use_kernel,
+                       modality_embeds=modality_embeds,
+                       encoder_embeds=encoder_embeds, remat=remat,
+                       act_spec=act_spec, kv_specs=kv_specs)
+    valid = (labels >= 0) & (labels < cfg.vocab_size)
+    S = tokens.shape[1]
+    if S > CHUNKED_CE_THRESHOLD:
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        nll_sum = _chunked_ce(out["hidden"], w, labels, valid, CE_CHUNK)
+        loss = nll_sum / jnp.maximum(jnp.sum(valid), 1)
+        return loss + aux_weight * out["aux_loss"]
+    logits = out["logits"].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux_weight * out["aux_loss"]

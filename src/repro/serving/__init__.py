@@ -1,0 +1,10 @@
+from repro.serving.engine import Engine, EngineConfig, RequestResult
+from repro.serving.evaluate import EvalResult, evaluate_method, make_problems
+from repro.serving.kv_manager import BlockManager
+from repro.serving.sampling import SamplingParams, sample_tokens
+
+__all__ = [
+    "Engine", "EngineConfig", "RequestResult",
+    "EvalResult", "evaluate_method", "make_problems",
+    "BlockManager", "SamplingParams", "sample_tokens",
+]

@@ -1,0 +1,432 @@
+"""The serving engine: vLLM-V1-style continuous batching in JAX.
+
+This is the system layer the STEP paper modifies. One engine instance holds
+a statically allocated paged KV pool (the per-device HBM budget), a block
+manager (the allocator whose free list defines "GPU memory full"), and a
+fixed-shape jitted decode step over ``max_batch`` slots.
+
+Scheduling semantics (paper §3, §4.2):
+
+  * baseline engines (SC / CoT / Slim-SC / DeepConf): when the next decode
+    step cannot be scheduled because the pool has no free block, a running
+    trace is PREEMPTED vLLM-style — its blocks are freed and it re-enters
+    the waiting queue; on resume its KV cache is RECOMPUTED (discard-and-
+    recompute). The waiting queue is where the paper's 40% latency goes.
+  * STEP: the policy returns the lowest-scored trace; the engine PRUNES it
+    and immediately reuses its blocks. The waiting queue never forms.
+
+Latency accounting mirrors the paper's Table 3: every wall-clock second of
+the engine loop is attributed to {prefill, decode, overhead}; every second
+a trace spends runnable-but-not-running (queued after preemption, or
+queued at admission because memory was full) is WAIT.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.pruning import DeepConfPolicy, PruningPolicy
+from repro.data.arithmetic import extract_answer
+from repro.core.scorer import scorer_score
+from repro.core.trace import Trace, TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.models.model import (decode_step, forward_full, init_decode_cache,
+                                write_prefill_kv)
+from repro.serving.kv_manager import BlockManager
+from repro.serving.sampling import SamplingParams, sample_tokens
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Static engine resources (the 'GPU')."""
+    max_batch: int = 64            # decode slots (>= trace budget N)
+    num_blocks: int = 128          # paged pool blocks incl. scratch
+    capacity: int = 512            # per-sequence token capacity (window)
+    max_new_tokens: int = 160
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    use_kernel: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    answer: Optional[str]
+    traces: List[Trace]
+    latency_s: float
+    total_tokens: int
+    wait_s: float
+    decode_s: float
+    prefill_s: float
+    num_pruned: int
+    num_preemptions: int
+
+
+class Engine:
+    """Continuous-batching engine serving one request (N parallel traces)
+    at a time — the paper's setting (one problem, N=64 traces)."""
+
+    def __init__(self, params: dict, cfg: ModelConfig, ecfg: EngineConfig,
+                 policy: PruningPolicy,
+                 scorer_params: Optional[dict] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.policy = policy
+        self.scorer_params = scorer_params
+        self.tok = get_tokenizer()
+        bs = cfg.kv_block_size
+        self.blocks_per_seq = -(-ecfg.capacity // bs)
+        self.block_mgr = BlockManager(ecfg.num_blocks, bs)
+        self._rng = jax.random.PRNGKey(ecfg.seed)
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    # jitted steps
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        cfg, ecfg = self.cfg, self.ecfg
+        has_scorer = self.scorer_params is not None
+        sp = ecfg.sampling
+
+        V = cfg.vocab_size  # mask vocab padding out of the sampler
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def batched_decode(params, cache, tokens, positions, block_tables,
+                           rng, scorer_params):
+            cache = dict(cache)
+            cache["block_tables"] = block_tables
+            out = decode_step(params, cfg, tokens, positions, cache,
+                              window_len=ecfg.capacity,
+                              use_kernel=ecfg.use_kernel)
+            logits = out["logits"].at[:, V:].set(-jnp.inf)
+            new_tokens, conf = sample_tokens(
+                rng, logits, temperature=sp.temperature,
+                top_k=sp.top_k, top_p=sp.top_p)
+            if has_scorer:
+                scores = scorer_score(scorer_params, out["hidden"])
+            else:
+                scores = jnp.zeros((tokens.shape[0],), jnp.float32)
+            new_cache = out["cache"]
+            new_cache.pop("block_tables", None)
+            return new_tokens, conf, scores, new_cache
+
+        self._decode = batched_decode
+
+        @jax.jit
+        def prefill(params, tokens):
+            out = forward_full(params, cfg, tokens, return_kv=True)
+            logits = out["logits"].at[..., V:].set(-jnp.inf)
+            return logits, out["kvs"]
+
+        self._prefill = prefill
+
+    # ------------------------------------------------------------------
+    # cache plumbing
+    # ------------------------------------------------------------------
+    def _init_cache(self):
+        """Shared pool sized to the engine budget (not per-sequence)."""
+        cache = init_decode_cache(
+            self.cfg, self.ecfg.max_batch, self.ecfg.capacity,
+            num_blocks=self.ecfg.num_blocks)
+        cache.pop("block_tables", None)
+        return cache
+
+    def _write_prefill(self, cache: dict, kvs, slot: int,
+                       block_row: np.ndarray, seq_len: int) -> dict:
+        """Scatter one trace's prefill KV/state into the shared pool."""
+        cfg = self.cfg
+        bt = jnp.asarray(block_row[None, :], jnp.int32)  # [1, bp]
+
+        def one(tree):
+            return jax.tree.map(lambda x: x[:, :1] if x.ndim > 1 else x, tree)
+
+        if cfg.arch_type == "ssm":
+            ss, cs = kvs
+            cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(ss[:, 0])
+            cache["conv_state"] = cache["conv_state"].at[:, slot].set(cs[:, 0])
+            return cache
+        if cfg.arch_type == "hybrid":
+            (ss, cs), (k, v) = kvs
+            ssf = ss.reshape(-1, *ss.shape[2:])
+            csf = cs.reshape(-1, *cs.shape[2:])
+            cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(ssf[:, 0])
+            cache["conv_state"] = cache["conv_state"].at[:, slot].set(csf[:, 0])
+            sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
+                   "block_tables": bt}
+            sub = write_prefill_kv(
+                cfg, sub, (k[:, :1], v[:, :1]),
+                jnp.full((1,), seq_len, jnp.int32))
+            cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
+            return cache
+        if cfg.use_mla:
+            sub = {"kv_pool": cache["kv_pool"], "block_tables": bt}
+            sub = write_prefill_kv(cfg, sub, kvs[:, :1],
+                                   jnp.full((1,), seq_len, jnp.int32))
+            cache["kv_pool"] = sub["kv_pool"]
+            return cache
+        k, v = kvs
+        sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
+               "block_tables": bt}
+        sub = write_prefill_kv(cfg, sub, (k[:, :1], v[:, :1]),
+                               jnp.full((1,), seq_len, jnp.int32))
+        cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
+        return cache
+
+    def _clear_slot_state(self, cache: dict, slot: int) -> dict:
+        if "ssm_state" in cache:
+            cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(0.0)
+            cache["conv_state"] = cache["conv_state"].at[:, slot].set(0.0)
+        return cache
+
+    # ------------------------------------------------------------------
+    # request serving
+    # ------------------------------------------------------------------
+    def serve(self, prompt_tokens: List[int], n_traces: int,
+              request_id: int = 0) -> RequestResult:
+        """Generate ``n_traces`` parallel traces for one prompt."""
+        ecfg = self.ecfg
+        assert n_traces <= ecfg.max_batch, "engine sized per trace budget"
+        t_start = time.perf_counter()
+
+        traces = [Trace(trace_id=i, request_id=request_id,
+                        prompt_tokens=list(prompt_tokens))
+                  for i in range(n_traces)]
+        waiting: List[Trace] = list(traces)
+        # DeepConf online: first `warmup` traces run as a closed warmup set
+        if isinstance(self.policy, DeepConfPolicy):
+            self.policy.threshold = None  # fresh threshold per request
+            head = waiting[:self.policy.warmup]
+            tail = waiting[self.policy.warmup:]
+            res_head = self._run_pass(head, t_start)
+            self.policy.record_warmup(
+                [t for t in head if t.status == TraceStatus.FINISHED])
+            if tail:
+                res_tail = self._run_pass(tail, time.perf_counter())
+            else:
+                res_tail = {k: 0.0 for k in res_head}
+            stats = {k: res_head[k] + res_tail[k] for k in res_head}
+        else:
+            stats = self._run_pass(waiting, t_start)
+
+        finished = [t for t in traces if t.status == TraceStatus.FINISHED]
+        answer = self.policy.vote(finished) if finished else None
+        latency = time.perf_counter() - t_start
+        return RequestResult(
+            request_id=request_id, answer=answer, traces=traces,
+            latency_s=latency,
+            total_tokens=sum(t.num_tokens for t in traces),
+            wait_s=sum(t.wait_time for t in traces),
+            decode_s=stats["decode_s"], prefill_s=stats["prefill_s"],
+            num_pruned=sum(t.status == TraceStatus.PRUNED for t in traces),
+            num_preemptions=sum(max(t.prefill_count - 1, 0) for t in traces),
+        )
+
+    # ------------------------------------------------------------------
+    def _run_pass(self, waiting: List[Trace], t0: float) -> Dict[str, float]:
+        """Run one closed set of traces to completion/pruning."""
+        ecfg, cfg, tok = self.ecfg, self.cfg, self.tok
+        B = ecfg.max_batch
+        bs = cfg.kv_block_size
+        cache = self._init_cache()
+
+        block_tables = np.zeros((B, self.blocks_per_seq), np.int32)
+        positions = np.zeros((B,), np.int32)
+        cur_tokens = np.zeros((B,), np.int32)
+        slot_of: Dict[int, int] = {}
+        free_slots = list(range(B))
+        running: List[Trace] = []
+        waiting = list(waiting)
+        for t in waiting:
+            t.status = TraceStatus.WAITING
+            # wait_time counts only MEMORY-induced waiting (paper Table 3):
+            # the clock starts at preemption or at a memory-blocked
+            # admission attempt, not at submission.
+            t.runnable_since = -1.0
+
+        prefill_s = decode_s = 0.0
+
+        def release(trace: Trace, status: TraceStatus):
+            nonlocal cache
+            if trace.blocks:
+                self.block_mgr.free(trace.blocks)
+                trace.blocks = []
+            if trace.batch_slot >= 0:
+                s = trace.batch_slot
+                block_tables[s, :] = self.block_mgr.scratch_block
+                positions[s] = 0
+                cache = self._clear_slot_state(cache, s)
+                free_slots.append(s)
+                slot_of.pop(trace.trace_id, None)
+                trace.batch_slot = -1
+            trace.status = status
+            if trace in running:
+                running.remove(trace)
+
+        def handle_memory_full(needy: Optional[Trace],
+                               at_admission: bool = False) -> bool:
+            """Pool has no free block. Returns True if progress was made.
+
+            STEP: prune the lowest-scored running trace, free its blocks —
+            the waiting queue never forms.
+            Baselines: at admission the new trace simply WAITS (vLLM does
+            not evict running work for new arrivals); mid-decode, the
+            last-arrived running trace is PREEMPTED (discard-and-recompute)
+            into the waiting queue.
+            """
+            victim = self.policy.on_memory_full(running)
+            if victim is not None:  # STEP prune
+                if len(running) <= 1 and needy is victim:
+                    # sole survivor: finish (truncate) instead of self-prune
+                    finish(victim)
+                    return True
+                release(victim, TraceStatus.PRUNED)
+                return True
+            if at_admission or not running:
+                return False  # baseline: queue the arrival, keep decoding
+            # vLLM preemption: lowest-priority = last-arrived running trace
+            victim = running[-1]
+            if victim is needy and len(running) == 1:
+                # lone trace cannot be preempted to help itself: truncate
+                finish(victim)
+                return True
+            if victim is needy:
+                victim = running[-2]
+            release(victim, TraceStatus.PREEMPTED)
+            victim.runnable_since = time.perf_counter()
+            waiting.append(victim)
+            return True
+
+        def finish(trace: Trace):
+            text = tok.decode(trace.output_tokens)
+            trace.answer = extract_answer(text)
+            release(trace, TraceStatus.FINISHED)
+
+        def try_admit() -> None:
+            nonlocal cache, prefill_s
+            while waiting and free_slots:
+                trace = waiting[0]
+                ids = trace.prompt_tokens + trace.output_tokens
+                need = self.block_mgr.blocks_for_tokens(
+                    min(len(ids) + 1, ecfg.capacity))
+                if not self.block_mgr.can_allocate(need):
+                    # memory full at admission: STEP prunes, baselines wait
+                    if trace.runnable_since < 0:
+                        trace.runnable_since = time.perf_counter()
+                    if not handle_memory_full(None, at_admission=True):
+                        return
+                    if not self.block_mgr.can_allocate(need):
+                        return
+                    continue
+                waiting.pop(0)
+                blocks = self.block_mgr.allocate(need)
+                slot = free_slots.pop(0)
+                if trace.runnable_since >= 0:
+                    trace.wait_time += time.perf_counter() - trace.runnable_since
+                    trace.runnable_since = -1.0
+                trace.blocks = blocks
+                trace.batch_slot = slot
+                trace.status = TraceStatus.RUNNING
+                trace.prefill_count += 1
+                slot_of[trace.trace_id] = slot
+                running.append(trace)
+
+                row = np.full((self.blocks_per_seq,), 0, np.int32)
+                row[:len(blocks)] = blocks
+                block_tables[slot] = row
+                t_pf = time.perf_counter()
+                ids_arr = jnp.asarray(np.array(ids, np.int32)[None, :])
+                logits, kvs = self._prefill(self.params, ids_arr)
+                cache_new = self._write_prefill(cache, kvs, slot, row,
+                                                len(ids))
+                # next token continues from the last prefill logit
+                positions[slot] = len(ids)
+                cur_tokens[slot] = int(jnp.argmax(logits[0, -1]))
+                # sample the first new token properly
+                self._rng, k = jax.random.split(self._rng)
+                sp = ecfg.sampling
+                nt, conf = sample_tokens(
+                    k, logits[:, -1], temperature=sp.temperature,
+                    top_k=sp.top_k, top_p=sp.top_p)
+                cur_tokens[slot] = int(nt[0])
+                trace.output_tokens.append(int(nt[0]))
+                trace.token_confidences.append(float(conf[0]))
+                cache = cache_new
+                prefill_s += time.perf_counter() - t_pf
+
+        # ------------------------------------------------------------
+        # main loop
+        # ------------------------------------------------------------
+        while waiting or running:
+            try_admit()
+            if not running:
+                if waiting:  # deadlocked on memory: should not happen
+                    raise RuntimeError("no trace schedulable")
+                break
+
+            # ensure every running trace owns the block for its next token
+            progress = True
+            for trace in list(running):
+                slot = trace.batch_slot
+                pos = int(positions[slot])
+                if pos >= ecfg.capacity:
+                    continue  # rolling window, block already owned
+                bidx = pos // bs
+                if bidx < len(trace.blocks):
+                    continue
+                while not self.block_mgr.can_allocate(1):
+                    if not handle_memory_full(trace):
+                        progress = False
+                        break
+                    if trace.status != TraceStatus.RUNNING:
+                        break  # the needy trace itself was pruned/preempted
+                if trace.status != TraceStatus.RUNNING or not progress:
+                    continue
+                blk = self.block_mgr.allocate(1)
+                trace.blocks.extend(blk)
+                block_tables[trace.batch_slot, bidx] = blk[0]
+            if not running:
+                continue
+
+            # one fixed-shape batched decode step
+            t_dec = time.perf_counter()
+            self._rng, k = jax.random.split(self._rng)
+            new_tokens, conf, scores, cache = self._decode(
+                self.params, cache,
+                jnp.asarray(cur_tokens[:, None]),
+                jnp.asarray(positions),
+                jnp.asarray(block_tables), k,
+                self.scorer_params)
+            new_tokens = np.asarray(new_tokens)
+            conf = np.asarray(conf)
+            scores = np.asarray(scores)
+            decode_s += time.perf_counter() - t_dec
+
+            for trace in list(running):
+                slot = trace.batch_slot
+                prev_token = int(cur_tokens[slot])
+                nt = int(new_tokens[slot])
+                # the score is for the hidden state of prev_token (the one
+                # just consumed by this step); boundary => step end
+                if prev_token == tok.step_id and self.policy.uses_scorer:
+                    trace.add_step_score(float(scores[slot]))
+                trace.output_tokens.append(nt)
+                trace.token_confidences.append(float(conf[slot]))
+                positions[slot] += 1
+                cur_tokens[slot] = nt
+                if nt == tok.eos_id or trace.num_tokens >= ecfg.max_new_tokens:
+                    finish(trace)
+
+            # signal-triggered termination (DeepConf / Slim-SC)
+            for trace in self.policy.traces_to_terminate(running):
+                if trace.status == TraceStatus.RUNNING:
+                    release(trace, TraceStatus.PRUNED)
+
+        return {"prefill_s": prefill_s, "decode_s": decode_s}

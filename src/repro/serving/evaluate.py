@@ -1,0 +1,89 @@
+"""End-to-end evaluation harness: run problems through the engine under a
+method (cot / sc / slimsc / deepconf / step) and report the paper's three
+metrics — accuracy, avg output tokens, latency — plus the Table 3 phase
+breakdown (wait / decode / prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.pruning import make_policy
+from repro.data.arithmetic import Problem, gen_problem, make_prompt
+from repro.data.tokenizer import get_tokenizer
+from repro.serving.engine import Engine, EngineConfig
+
+
+@dataclasses.dataclass
+class EvalResult:
+    method: str
+    n_traces: int
+    accuracy: float
+    avg_tokens: float
+    avg_latency_s: float
+    total_wait_s: float
+    total_decode_s: float
+    total_prefill_s: float
+    num_pruned: int
+    num_preemptions: int
+    per_problem: List[dict]
+
+
+def make_problems(n: int, seed: int = 1234,
+                  n_steps=(3, 6)) -> List[Problem]:
+    rng = random.Random(seed)
+    return [gen_problem(rng, n_steps) for _ in range(n)]
+
+
+def evaluate_method(method: str, params: dict, cfg: ModelConfig,
+                    problems: List[Problem], n_traces: int,
+                    ecfg: EngineConfig,
+                    scorer_params: Optional[dict] = None,
+                    policy_kwargs: Optional[dict] = None,
+                    verbose: bool = False) -> EvalResult:
+    tok = get_tokenizer()
+    policy_kwargs = dict(policy_kwargs or {})
+    if method == "cot":
+        n_traces = 1
+    records = []
+    totals = dict(wait=0.0, decode=0.0, prefill=0.0, pruned=0, preempt=0)
+    correct = 0
+    for qid, p in enumerate(problems):
+        policy = make_policy(method, **policy_kwargs)
+        engine = Engine(params, cfg, ecfg, policy,
+                        scorer_params=scorer_params
+                        if policy.uses_scorer else None)
+        prompt = tok.encode(make_prompt(p), add_bos=True)
+        res = engine.serve(prompt, n_traces, request_id=qid)
+        ok = res.answer is not None and int(res.answer) == p.answer
+        correct += ok
+        totals["wait"] += res.wait_s
+        totals["decode"] += res.decode_s
+        totals["prefill"] += res.prefill_s
+        totals["pruned"] += res.num_pruned
+        totals["preempt"] += res.num_preemptions
+        records.append({
+            "qid": qid, "answer": res.answer, "gold": p.answer,
+            "correct": bool(ok), "tokens": res.total_tokens,
+            "latency_s": res.latency_s, "wait_s": res.wait_s,
+            "decode_s": res.decode_s, "prefill_s": res.prefill_s,
+            "pruned": res.num_pruned, "preemptions": res.num_preemptions,
+        })
+        if verbose:
+            print(f"  [{method}] q{qid}: ans={res.answer} gold={p.answer} "
+                  f"ok={ok} tok={res.total_tokens} "
+                  f"lat={res.latency_s:.2f}s wait={res.wait_s:.2f}s")
+    n = max(len(problems), 1)
+    return EvalResult(
+        method=method, n_traces=n_traces,
+        accuracy=correct / n,
+        avg_tokens=float(np.mean([r["tokens"] for r in records])),
+        avg_latency_s=float(np.mean([r["latency_s"] for r in records])),
+        total_wait_s=totals["wait"], total_decode_s=totals["decode"],
+        total_prefill_s=totals["prefill"],
+        num_pruned=totals["pruned"], num_preemptions=totals["preempt"],
+        per_problem=records)

@@ -1,0 +1,63 @@
+"""Paged KV block manager (vLLM-style, host-side allocator).
+
+The device-side pool is a statically allocated JAX array sized to the HBM
+budget; this manager hands out block ids. "GPU memory full" in the paper
+== "free list empty at schedule time" here (see DESIGN.md §3).
+
+Block 0 is reserved as a scratch block: dead decode slots point their
+block tables at it so a fixed-shape batched decode step can run without
+corrupting live sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class BlockManager:
+    num_blocks: int
+    block_size: int
+
+    def __post_init__(self):
+        assert self.num_blocks >= 2
+        self._free: List[int] = list(range(1, self.num_blocks))  # 0=scratch
+        self._allocated = 0
+
+    @property
+    def scratch_block(self) -> int:
+        return 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_blocks / (self.num_blocks - 1)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return len(self._free) >= n_blocks
+
+    def allocate(self, n_blocks: int) -> Optional[List[int]]:
+        if not self.can_allocate(n_blocks):
+            return None
+        out = self._free[:n_blocks]
+        del self._free[:n_blocks]
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b != 0 and b not in self._free, f"double free of block {b}"
+            self._free.append(b)
+
+    def check_invariants(self) -> None:
+        assert len(set(self._free)) == len(self._free)
+        assert all(1 <= b < self.num_blocks for b in self._free)

@@ -1,0 +1,47 @@
+"""Token sampling (temperature / top-k / top-p) + confidence extraction."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.8
+    top_k: int = 20
+    top_p: float = 0.95
+    max_new_tokens: int = 160
+
+
+@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
+def sample_tokens(rng: jax.Array, logits: jax.Array, *,
+                  temperature: float = 0.8, top_k: int = 20,
+                  top_p: float = 0.95):
+    """logits [B, V] -> (tokens [B], confidence [B]).
+
+    Confidence = probability the model assigned to the sampled token under
+    the UNtempered distribution (the DeepConf-style signal).
+    """
+    logits_f = logits.astype(jnp.float32)
+    base_logp = jax.nn.log_softmax(logits_f, axis=-1)
+
+    scaled = logits_f / jnp.maximum(temperature, 1e-6)
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if 0.0 < top_p < 1.0:
+        sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=1)
+        scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+
+    tokens = jax.random.categorical(rng, scaled, axis=-1)
+    conf = jnp.exp(jnp.take_along_axis(base_logp, tokens[:, None],
+                                       axis=1))[:, 0]
+    return tokens.astype(jnp.int32), conf

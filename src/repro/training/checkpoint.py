@@ -1,0 +1,41 @@
+"""Minimal dependency-free checkpointing: pytree <-> .npz."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    arrays = {}
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        if a.dtype == jnp.bfloat16:  # numpy .npz cannot round-trip bf16
+            a = a.astype(np.float32)
+        arrays[f"leaf_{i}"] = a
+    arrays["__treedef__"] = np.frombuffer(
+        repr(treedef).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load leaves into the structure of ``like`` (shapes must match)."""
+    data = np.load(path, allow_pickle=False)
+    leaves, treedef = _flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert arr.shape == tuple(ref.shape), (
+            f"checkpoint leaf {i}: {arr.shape} != {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,90 @@
+"""Optimizers (pure JAX, optax-free): Adam / AdamW + schedules.
+
+States are pytrees mirroring the params tree; sharding rules therefore
+apply to optimizer state exactly as to params (ZeRO-style sharding is a
+launcher-level decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    # Low-precision moment storage (production lever for models whose
+    # fp32 Adam states exceed the pod's HBM, e.g. deepseek-v2-236b on
+    # 256 v5e chips: 2.36 TB at fp32). Math stays fp32; only storage
+    # rounds.
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamState:
+        md = jnp.dtype(self.moment_dtype)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, md), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                         nu=jax.tree.map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return self.learning_rate
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        md = jnp.dtype(self.moment_dtype)
+        mu = jax.tree.map(
+            lambda m, g: (self.b1 * m.astype(jnp.float32)
+                          + (1 - self.b1) * g.astype(jnp.float32)).astype(md),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (self.b2 * v.astype(jnp.float32)
+                          + (1 - self.b2)
+                          * jnp.square(g.astype(jnp.float32))).astype(md),
+            state.nu, grads)
+        lr = self._lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m.astype(jnp.float32) / b1c) \
+                / (jnp.sqrt(v.astype(jnp.float32) / b2c) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,72 @@
+"""LM training loop (used by the quickstart example and the end-to-end
+driver that trains the tiny reasoning model the serving benchmarks sample
+from)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.init import init_params
+from repro.models.model import lm_loss
+from repro.training.optimizer import AdamW, AdamState, cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 300
+    seq_len: int = 256
+    batch_size: int = 16
+    peak_lr: float = 3e-3
+    warmup: int = 30
+    weight_decay: float = 0.01
+    log_every: int = 25
+    seed: int = 0
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW,
+                    use_kernel: bool = False) -> Callable:
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def train_step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, tokens, labels,
+                              use_kernel=use_kernel))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+    return train_step
+
+
+def train_lm(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None,
+             batches=None, verbose: bool = True):
+    """Train from scratch on the synthetic reasoning task; returns
+    (params, history)."""
+    from repro.data.dataset import lm_batches
+    tcfg = tcfg or TrainConfig()
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt = AdamW(learning_rate=cosine_schedule(
+        tcfg.peak_lr, tcfg.warmup, tcfg.steps),
+        weight_decay=tcfg.weight_decay)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(cfg, opt)
+    if batches is None:
+        batches = lm_batches(tcfg.seq_len, tcfg.batch_size, seed=tcfg.seed)
+
+    history = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        arr = next(batches)
+        tokens = jnp.asarray(arr[:, :-1])
+        labels = jnp.asarray(arr[:, 1:])
+        params, opt_state, loss = step_fn(params, opt_state, tokens, labels)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            loss_f = float(loss)
+            history.append({"step": step, "loss": loss_f,
+                            "elapsed_s": time.time() - t0})
+            if verbose:
+                print(f"  train step {step:4d}  loss {loss_f:.4f}")
+    return params, history

@@ -1,0 +1,200 @@
+"""Unit + property tests for the STEP core: scorer, segmentation, voting,
+pruning policies, trace aggregation, block manager."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pruning import (DeepConfPolicy, SlimSCPolicy, StepPolicy,
+                                make_policy)
+from repro.core.scorer import (init_scorer, rank_accuracy, scorer_logits,
+                               scorer_score, train_scorer, weighted_bce_loss)
+from repro.core.segmentation import (StepBoundaryDetector, extract_think,
+                                     split_steps)
+from repro.core.trace import Trace, TraceStatus
+from repro.core.voting import majority_vote, vote_breakdown, weighted_vote
+from repro.serving.kv_manager import BlockManager
+
+
+# ---------------------------------------------------------------------------
+# scorer
+# ---------------------------------------------------------------------------
+
+def test_scorer_architecture_matches_paper():
+    """Paper Appendix A: Input -> 512 (ReLU) -> 1."""
+    p = init_scorer(jax.random.PRNGKey(0), d_model=64)
+    assert p["w1"].shape == (64, 512)
+    assert p["w2"].shape == (512, 1)
+    h = jnp.ones((3, 64))
+    s = scorer_score(p, h)
+    assert s.shape == (3,)
+    assert np.all((np.asarray(s) >= 0) & (np.asarray(s) <= 1))
+
+
+def test_weighted_bce_alpha_balances_classes():
+    """With alpha = K-/K+, a batch skewed negative still pulls positive
+    logits up as strongly as negative logits down."""
+    p = init_scorer(jax.random.PRNGKey(0), d_model=8)
+    h = jnp.ones((10, 8))
+    y_pos, y_neg = jnp.ones((10,)), jnp.zeros((10,))
+    l_pos = weighted_bce_loss(p, h, y_pos, alpha=3.0)
+    l_neg = weighted_bce_loss(p, h, y_neg, alpha=3.0)
+    assert np.isfinite(float(l_pos)) and np.isfinite(float(l_neg))
+
+
+def test_scorer_learns_separable_data():
+    rng = np.random.RandomState(0)
+    d = 16
+    pos = rng.randn(400, d) + 1.5
+    neg = rng.randn(400, d) - 1.5
+    h = np.concatenate([pos, neg]).astype(np.float32)
+    y = np.concatenate([np.ones(400), np.zeros(400)]).astype(np.int32)
+    params, info = train_scorer(h, y)
+    s_pos = np.asarray(scorer_score(params, jnp.asarray(pos)))
+    s_neg = np.asarray(scorer_score(params, jnp.asarray(neg)))
+    assert rank_accuracy(s_pos, s_neg) > 0.95
+
+
+def test_rank_accuracy_extremes():
+    assert rank_accuracy(np.array([1.0, 0.9]), np.array([0.1, 0.2])) == 1.0
+    assert rank_accuracy(np.array([0.1]), np.array([0.9])) == 0.0
+    assert np.isnan(rank_accuracy(np.array([]), np.array([0.5])))
+
+
+# ---------------------------------------------------------------------------
+# segmentation
+# ---------------------------------------------------------------------------
+
+def test_extract_think():
+    assert extract_think("<think>abc</think>xyz") == "abc"
+    assert extract_think("no markers here") == "no markers here"
+    assert extract_think("<think>unclosed") == "unclosed"
+
+
+def test_split_steps():
+    text = "<think>s1\n\ns2\n\n\n\ns3\n\n</think>answer"
+    assert split_steps(text) == ["s1", "s2", "s3"]
+
+
+def test_boundary_detector_stops_at_think_close():
+    det = StepBoundaryDetector(boundary_ids={5}, think_close_id=9)
+    assert det.boundaries([1, 5, 2, 5, 9, 5]) == [1, 3]
+
+
+# ---------------------------------------------------------------------------
+# voting
+# ---------------------------------------------------------------------------
+
+def test_majority_vote():
+    assert majority_vote(["a", "b", "a", None]) == "a"
+    assert majority_vote([None, None]) is None
+
+
+def test_weighted_vote_flips_majority():
+    # 2 votes for "a" at low weight vs 1 vote for "b" at high weight
+    assert weighted_vote(["a", "a", "b"], [0.1, 0.1, 0.9]) == "b"
+
+
+@given(st.lists(st.sampled_from(["a", "b", "c"]), min_size=1, max_size=30))
+def test_weighted_vote_uniform_weights_equals_majority(answers):
+    assert weighted_vote(answers, [1.0] * len(answers)) \
+        == majority_vote(answers)
+
+
+# ---------------------------------------------------------------------------
+# trace aggregation
+# ---------------------------------------------------------------------------
+
+def test_trace_running_mean():
+    t = Trace(trace_id=0, request_id=0, prompt_tokens=[1])
+    assert t.score == 0.5  # uninformative prior
+    t.add_step_score(1.0)
+    t.add_step_score(0.0)
+    assert t.score == 0.5
+    t.add_step_score(1.0)
+    assert abs(t.score - 2 / 3) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def _mk_trace(i, score=None, conf=None, tokens=64):
+    t = Trace(trace_id=i, request_id=0, prompt_tokens=[1])
+    t.status = TraceStatus.RUNNING
+    t.output_tokens = list(range(tokens))
+    if score is not None:
+        t.add_step_score(score)
+    if conf is not None:
+        t.token_confidences = [conf] * tokens
+    return t
+
+
+def test_step_policy_prunes_min_score():
+    pol = StepPolicy()
+    traces = [_mk_trace(0, score=0.9), _mk_trace(1, score=0.2),
+              _mk_trace(2, score=0.6)]
+    assert pol.on_memory_full(traces).trace_id == 1
+
+
+def test_sc_policy_preempts():
+    pol = make_policy("sc")
+    assert pol.on_memory_full([_mk_trace(0)]) is None
+
+
+def test_deepconf_threshold():
+    pol = DeepConfPolicy(warmup=4, keep_pct=0.25)
+    warm = [_mk_trace(i, conf=c) for i, c in enumerate([0.9, 0.8, 0.5, 0.4])]
+    pol.record_warmup(warm)
+    assert pol.threshold is not None
+    low = _mk_trace(9, conf=0.3)
+    high = _mk_trace(10, conf=0.95)
+    doomed = pol.traces_to_terminate([low, high])
+    assert low in doomed and high not in doomed
+
+
+def test_slimsc_prunes_identical_traces():
+    pol = SlimSCPolicy(threshold=0.9, check_every=8)
+    a = _mk_trace(0, tokens=32)
+    b = _mk_trace(1, tokens=32)
+    b.output_tokens = list(a.output_tokens)
+    c = _mk_trace(2, tokens=32)
+    c.output_tokens = list(reversed(a.output_tokens))
+    doomed = pol.traces_to_terminate([a, b, c])
+    assert len(doomed) == 1 and doomed[0] in (a, b)
+
+
+# ---------------------------------------------------------------------------
+# block manager (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(2, 64), st.lists(
+    st.tuples(st.booleans(), st.integers(1, 8)), max_size=40))
+def test_block_manager_never_double_allocates(num_blocks, ops):
+    mgr = BlockManager(num_blocks=num_blocks, block_size=16)
+    held = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            blocks = mgr.allocate(n)
+            if blocks is not None:
+                assert len(blocks) == n
+                for b in blocks:
+                    assert all(b not in h for h in held)
+                    assert b != mgr.scratch_block
+                held.append(blocks)
+        elif held:
+            mgr.free(held.pop())
+        mgr.check_invariants()
+    for h in held:
+        mgr.free(h)
+    assert mgr.free_blocks == num_blocks - 1
+
+
+@given(st.integers(1, 1000), st.integers(1, 64))
+def test_blocks_for_tokens(n_tokens, block_size):
+    mgr = BlockManager(num_blocks=4, block_size=block_size)
+    n = mgr.blocks_for_tokens(n_tokens)
+    assert (n - 1) * block_size < n_tokens <= n * block_size

@@ -1,0 +1,78 @@
+"""Property-based tests on the synthetic task + tokenizer + segmentation
+invariants the STEP pipeline depends on."""
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.segmentation import split_steps
+from repro.data.arithmetic import (MOD, Problem, gen_problem, render_trace,
+                                   verify)
+from repro.data.tokenizer import get_tokenizer
+
+
+@st.composite
+def problems(draw):
+    k = draw(st.integers(1, 8))
+    return Problem(
+        operands=[draw(st.integers(0, 9)) for _ in range(k + 1)],
+        ops=[draw(st.sampled_from("+-*")) for _ in range(k)])
+
+
+@given(problems())
+def test_gold_trace_verifies(p):
+    text, ok = render_trace(p)
+    assert ok
+    ans, correct = verify(p, text)
+    assert correct and ans == str(p.answer)
+
+
+@given(problems(), st.integers(0, 7), st.integers(0, 10**6))
+def test_corrupt_flag_agrees_with_verifier(p, cfrom, seed):
+    """The corruption may cancel downstream (e.g. *0 after the error), so
+    the invariant is CONSISTENCY: render's own correctness flag must agree
+    with the rule-based verifier on the rendered text."""
+    cfrom = min(cfrom, len(p.ops) - 1)
+    text, ok = render_trace(p, corrupt_from=cfrom, rng=random.Random(seed))
+    ans, correct = verify(p, text)
+    assert correct == ok
+    assert ans is not None
+
+
+@given(problems())
+def test_steps_equal_ops(p):
+    text, _ = render_trace(p)
+    assert len(split_steps(text)) == len(p.ops)
+
+
+@given(problems())
+def test_tokenizer_roundtrip(p):
+    tok = get_tokenizer()
+    text, _ = render_trace(p)
+    ids = tok.encode(text)
+    assert tok.decode(ids) == text
+
+
+@given(problems())
+def test_answer_in_range(p):
+    assert 0 <= p.answer < MOD
+
+
+@given(st.integers(0, 10**6))
+def test_gen_problem_deterministic(seed):
+    a = gen_problem(random.Random(seed))
+    b = gen_problem(random.Random(seed))
+    assert a.operands == b.operands and a.ops == b.ops
+
+
+@given(problems(), problems())
+@settings(max_examples=30)
+def test_boundary_token_count_matches_steps(p, q):
+    """#("\\n\\n" tokens) inside <think> == #steps — the engine's scorer
+    fires exactly once per reasoning step."""
+    tok = get_tokenizer()
+    text, _ = render_trace(p)
+    ids = tok.encode(text)
+    stop = ids.index(tok.think_close_id)
+    n_boundaries = sum(1 for t in ids[:stop] if t == tok.step_id)
+    assert n_boundaries == len(split_steps(text))

