@@ -18,9 +18,12 @@ def run(verbose: bool = False):
     for n in BUDGETS:
         # pool scales with budget but stays undersized (paper setting)
         blocks = max(12, int(n * 1.6) + 4)
+        # per-trace prefill: undersized-pool pressure assumes private
+        # prompt blocks per trace (docs/ENGINE.md)
         ecfg = EngineConfig(max_batch=max(n, 1), num_blocks=blocks,
                             capacity=256, max_new_tokens=MAX_NEW,
-                            sampling=SamplingParams(max_new_tokens=MAX_NEW))
+                            sampling=SamplingParams(max_new_tokens=MAX_NEW),
+                            share_prompt_prefix=False)
         for method in ("sc", "step"):
             if n == 1 and method == "step":
                 continue  # single trace: no pruning possible

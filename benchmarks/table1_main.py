@@ -20,9 +20,12 @@ METHODS = ("cot", "sc", "slimsc", "deepconf", "step")
 def run(verbose: bool = False):
     params, scorer, cfg = load_artifacts()
     problems = make_problems(N_PROBLEMS, seed=11, n_steps=(6, 9))
+    # per-trace prefill: keep the paper-regime wait/preemption columns
+    # comparable with table3_breakdown (docs/ENGINE.md)
     ecfg = EngineConfig(max_batch=N_TRACES, num_blocks=NUM_BLOCKS,
                         capacity=256, max_new_tokens=MAX_NEW,
-                        sampling=SamplingParams(max_new_tokens=MAX_NEW))
+                        sampling=SamplingParams(max_new_tokens=MAX_NEW),
+                        share_prompt_prefix=False)
     rows = []
     for method in METHODS:
         pkw = {"warmup": 4} if method == "deepconf" else {}

@@ -18,9 +18,13 @@ MAX_NEW = 120
 def run(verbose: bool = False):
     params, scorer, cfg = load_artifacts()
     problems = make_problems(N_PROBLEMS, seed=23, n_steps=(6, 9))
+    # per-trace prefill: the paper's Table-3 accounting baseline predates
+    # prefix sharing — keep its phase breakdown reproducible
+    # (docs/ENGINE.md)
     ecfg = EngineConfig(max_batch=N_TRACES, num_blocks=NUM_BLOCKS,
                         capacity=256, max_new_tokens=MAX_NEW,
-                        sampling=SamplingParams(max_new_tokens=MAX_NEW))
+                        sampling=SamplingParams(max_new_tokens=MAX_NEW),
+                        share_prompt_prefix=False)
     rows = []
     for method in ("sc", "slimsc", "deepconf", "step"):
         pkw = {"warmup": 4} if method == "deepconf" else {}

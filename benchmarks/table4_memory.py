@@ -22,9 +22,13 @@ def run(verbose: bool = False):
     rows = []
     for frac in FRACTIONS:
         blocks = max(8, int(FULL_BLOCKS * frac))
+        # per-trace prefill: the sweep's "memory full" thresholds assume
+        # every trace owns private prompt blocks; sharing would shift the
+        # pruning onset per budget (docs/ENGINE.md, memory accounting)
         ecfg = EngineConfig(max_batch=N_TRACES, num_blocks=blocks,
                             capacity=256, max_new_tokens=MAX_NEW,
-                            sampling=SamplingParams(max_new_tokens=MAX_NEW))
+                            sampling=SamplingParams(max_new_tokens=MAX_NEW),
+                            share_prompt_prefix=False)
         res = evaluate_method("step", params, cfg, problems, N_TRACES,
                               ecfg, scorer_params=scorer, verbose=verbose)
         rows.append({"memory_fraction": frac, "num_blocks": blocks,

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import argparse
 
-from repro.serving import EngineConfig, SamplingParams, evaluate_method, \
-    make_problems
+from repro.serving import (EngineConfig, SamplingParams, evaluate_method,
+                           evaluate_method_batched, make_problems)
 
 
 def main():
@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--difficulty", type=int, nargs=2, default=(5, 8),
                     metavar=("MIN", "MAX"), help="ops per problem")
     ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--batched", action="store_true",
+                    help="submit all problems to ONE engine as a "
+                         "request queue (cross-request contention)")
     args = ap.parse_args()
 
     from benchmarks.common import load_artifacts
@@ -37,9 +40,10 @@ def main():
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \
         if args.method == "deepconf" else {}
-    res = evaluate_method(args.method, params, cfg, problems, args.traces,
-                          ecfg, scorer_params=scorer, policy_kwargs=pkw,
-                          verbose=True)
+    eval_fn = evaluate_method_batched if args.batched else evaluate_method
+    res = eval_fn(args.method, params, cfg, problems, args.traces,
+                  ecfg, scorer_params=scorer, policy_kwargs=pkw,
+                  verbose=True)
     print(f"\n[{args.method}] acc={res.accuracy:.2f} "
           f"tokens={res.avg_tokens:.0f} latency={res.avg_latency_s:.2f}s "
           f"wait={res.total_wait_s:.2f}s pruned={res.num_pruned} "

@@ -564,6 +564,25 @@ def write_prefill_kv(cfg: ModelConfig, cache: dict, kvs,
     return cache
 
 
+def copy_kv_block(cfg: ModelConfig, cache: dict, src: jax.Array,
+                  dst: jax.Array) -> dict:
+    """Device-side copy of one paged KV block: pool[:, dst] = pool[:, src].
+
+    The copy-on-write step behind prefix sharing: when the engine must
+    write into a block whose refcount is > 1, it allocates ``dst``, copies
+    the shared contents, and repoints the writer's block table. Only the
+    paged attention pools are touched; per-slot recurrent state (SSM/conv)
+    is not block-addressed and needs no COW. ``src``/``dst`` may be traced
+    scalars so a single jitted instance serves every block pair.
+    """
+    cache = dict(cache)
+    for key in ("k_pool", "v_pool", "kv_pool"):
+        if key in cache:
+            pool = cache[key]
+            cache[key] = pool.at[:, dst].set(pool[:, src])
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # loss
 # ---------------------------------------------------------------------------

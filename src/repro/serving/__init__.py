@@ -1,10 +1,12 @@
-from repro.serving.engine import Engine, EngineConfig, RequestResult
-from repro.serving.evaluate import EvalResult, evaluate_method, make_problems
+from repro.serving.engine import Engine, EngineConfig, Request, RequestResult
+from repro.serving.evaluate import (EvalResult, evaluate_method,
+                                    evaluate_method_batched, make_problems)
 from repro.serving.kv_manager import BlockManager
 from repro.serving.sampling import SamplingParams, sample_tokens
 
 __all__ = [
-    "Engine", "EngineConfig", "RequestResult",
-    "EvalResult", "evaluate_method", "make_problems",
+    "Engine", "EngineConfig", "Request", "RequestResult",
+    "EvalResult", "evaluate_method", "evaluate_method_batched",
+    "make_problems",
     "BlockManager", "SamplingParams", "sample_tokens",
 ]

@@ -15,13 +15,35 @@ Scheduling semantics (paper §3, §4.2):
   * STEP: the policy returns the lowest-scored trace; the engine PRUNES it
     and immediately reuses its blocks. The waiting queue never forms.
 
+Prefix sharing (``EngineConfig.share_prompt_prefix``, default on): all N
+traces of a request decode from the *same* prompt, so the prompt KV is
+computed once per request, written into shared paged blocks, and forked
+into each trace's block table with refcounting. The first time a trace
+writes into a still-shared block (its first generated token lands in the
+prompt's partial tail block) the engine copy-on-writes that block. With
+the flag off the engine reproduces the original per-trace prefill path
+(N sequential prompt prefills), which is the accounting baseline for
+Table 3.
+
+Multi-request scheduling: ``serve_batch`` admits traces from a queue of
+requests into one shared decode batch; traces from different requests
+co-exist in the fixed-shape decode step, contend for the same block pool,
+and are aggregated into per-request ``RequestResult``s. Policies act per
+request: the needy trace's own request's policy decides what to prune;
+baseline preemption (last-arrived running trace) is global, like vLLM's
+latest-arrival eviction.
+
 Latency accounting mirrors the paper's Table 3: every wall-clock second of
 the engine loop is attributed to {prefill, decode, overhead}; every second
 a trace spends runnable-but-not-running (queued after preemption, or
-queued at admission because memory was full) is WAIT.
+queued at admission because memory was full) is WAIT. Decode seconds of
+the shared batched step are attributed to requests proportionally to
+their running traces. Waiting for a free decode *slot* (queue longer than
+``max_batch``) is not memory-induced and is not counted as WAIT.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from functools import partial
@@ -37,8 +59,8 @@ from repro.data.arithmetic import extract_answer
 from repro.core.scorer import scorer_score
 from repro.core.trace import Trace, TraceStatus
 from repro.data.tokenizer import get_tokenizer
-from repro.models.model import (decode_step, forward_full, init_decode_cache,
-                                write_prefill_kv)
+from repro.models.model import (copy_kv_block, decode_step, forward_full,
+                                init_decode_cache, write_prefill_kv)
 from repro.serving.kv_manager import BlockManager
 from repro.serving.sampling import SamplingParams, sample_tokens
 
@@ -53,6 +75,26 @@ class EngineConfig:
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     use_kernel: bool = False
     seed: int = 0
+    # Prefill the prompt once per request and fork its blocks into every
+    # trace (COW on first trace-private write). False restores the
+    # original per-trace prefill path (the Table-3 accounting baseline).
+    share_prompt_prefix: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of work for the scheduler: a prompt and a trace budget.
+
+    ``policy`` overrides the engine-level policy for this request; pass a
+    fresh instance per request when the policy is stateful (DeepConf's
+    warmup threshold, Slim-SC's check cursor) and requests run
+    concurrently. When left None in a multi-request batch, the engine
+    deep-copies its default policy per request for the same reason.
+    """
+    request_id: int
+    prompt_tokens: List[int]
+    n_traces: int
+    policy: Optional[PruningPolicy] = None
 
 
 @dataclasses.dataclass
@@ -67,11 +109,60 @@ class RequestResult:
     prefill_s: float
     num_pruned: int
     num_preemptions: int
+    peak_blocks_used: int = 0  # pool-wide peak during this request's batch
+
+
+@dataclasses.dataclass
+class _SharedPrefix:
+    """Per-request artifact of the one-shot prompt prefill."""
+    blocks: List[int]           # holder's own references (freed at req end)
+    seq_len: int
+    last_logits: jax.Array      # [1, Vp] vocab-masked last-position logits
+    slot_state: Optional[tuple]  # (ssm, conv) end state for ssm/hybrid
+
+
+class _ReqState:
+    """Scheduler-side bookkeeping for one in-flight request."""
+
+    def __init__(self, req: Request, policy: PruningPolicy,
+                 traces: List[Trace]):
+        self.req = req
+        self.policy = policy
+        self.traces = traces
+        self.prefix: Optional[_SharedPrefix] = None
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.t_done: Optional[float] = None
+        self.warmup_recorded = not isinstance(policy, DeepConfPolicy)
+
+    @property
+    def request_id(self) -> int:
+        return self.req.request_id
+
+    def admissible(self, trace: Trace) -> bool:
+        """DeepConf online: traces beyond the warmup set wait until the
+        warmup traces finished and the threshold exists."""
+        if self.warmup_recorded:
+            return True
+        return trace.trace_id < self.policy.warmup
+
+    def update_gate(self) -> None:
+        if self.warmup_recorded:
+            return
+        warm = self.traces[:self.policy.warmup]
+        if all(not t.alive for t in warm):
+            self.policy.record_warmup(
+                [t for t in warm if t.status == TraceStatus.FINISHED])
+            self.warmup_recorded = True
+
+    def done(self) -> bool:
+        return all(not t.alive for t in self.traces)
 
 
 class Engine:
-    """Continuous-batching engine serving one request (N parallel traces)
-    at a time — the paper's setting (one problem, N=64 traces)."""
+    """Continuous-batching engine over a queue of requests, each fanning
+    out into N parallel traces (the paper's setting: one problem, N=64
+    traces — ``serve``; cross-request contention — ``serve_batch``)."""
 
     def __init__(self, params: dict, cfg: ModelConfig, ecfg: EngineConfig,
                  policy: PruningPolicy,
@@ -128,6 +219,11 @@ class Engine:
 
         self._prefill = prefill
 
+        # COW block copy: pool[:, dst] = pool[:, src], one jitted instance
+        # for all block pairs (src/dst are traced scalars).
+        self._copy_block = jax.jit(partial(copy_kv_block, cfg),
+                                   donate_argnums=(0,))
+
     # ------------------------------------------------------------------
     # cache plumbing
     # ------------------------------------------------------------------
@@ -139,46 +235,64 @@ class Engine:
         cache.pop("block_tables", None)
         return cache
 
-    def _write_prefill(self, cache: dict, kvs, slot: int,
-                       block_row: np.ndarray, seq_len: int) -> dict:
-        """Scatter one trace's prefill KV/state into the shared pool."""
+    def _split_prefill_kvs(self, kvs) -> Tuple[Optional[tuple],
+                                               Optional[tuple]]:
+        """Split forward_full(return_kv=True) output for a batch-1 prefill
+        into (paged attention KV | None, per-slot recurrent state | None).
+        """
         cfg = self.cfg
-        bt = jnp.asarray(block_row[None, :], jnp.int32)  # [1, bp]
-
-        def one(tree):
-            return jax.tree.map(lambda x: x[:, :1] if x.ndim > 1 else x, tree)
-
         if cfg.arch_type == "ssm":
             ss, cs = kvs
-            cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(ss[:, 0])
-            cache["conv_state"] = cache["conv_state"].at[:, slot].set(cs[:, 0])
-            return cache
+            return None, (ss[:, 0], cs[:, 0])
         if cfg.arch_type == "hybrid":
             (ss, cs), (k, v) = kvs
             ssf = ss.reshape(-1, *ss.shape[2:])
             csf = cs.reshape(-1, *cs.shape[2:])
-            cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(ssf[:, 0])
-            cache["conv_state"] = cache["conv_state"].at[:, slot].set(csf[:, 0])
-            sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
-                   "block_tables": bt}
-            sub = write_prefill_kv(
-                cfg, sub, (k[:, :1], v[:, :1]),
-                jnp.full((1,), seq_len, jnp.int32))
-            cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
+            return (k[:, :1], v[:, :1]), (ssf[:, 0], csf[:, 0])
+        if cfg.use_mla:
+            return kvs[:, :1], None
+        k, v = kvs
+        return (k[:, :1], v[:, :1]), None
+
+    def _write_prefix_kv(self, cache: dict, attn_kvs, block_row: np.ndarray,
+                         seq_len: int) -> dict:
+        """Write prompt KV into the paged pools ONCE for a block row.
+
+        With prefix sharing this runs once per request; every trace then
+        reads these blocks through its forked block table.
+        """
+        if attn_kvs is None:
             return cache
+        cfg = self.cfg
+        bt = jnp.asarray(block_row[None, :], jnp.int32)  # [1, bp]
+        lens = jnp.full((1,), seq_len, jnp.int32)
         if cfg.use_mla:
             sub = {"kv_pool": cache["kv_pool"], "block_tables": bt}
-            sub = write_prefill_kv(cfg, sub, kvs[:, :1],
-                                   jnp.full((1,), seq_len, jnp.int32))
+            sub = write_prefill_kv(cfg, sub, attn_kvs, lens)
             cache["kv_pool"] = sub["kv_pool"]
             return cache
-        k, v = kvs
+        k, v = attn_kvs
         sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
                "block_tables": bt}
-        sub = write_prefill_kv(cfg, sub, (k[:, :1], v[:, :1]),
-                               jnp.full((1,), seq_len, jnp.int32))
+        sub = write_prefill_kv(cfg, sub, (k, v), lens)
         cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
         return cache
+
+    def _write_slot_state(self, cache: dict, slot_state, slot: int) -> dict:
+        """Scatter recurrent (SSM/conv) prefill end-state into one slot."""
+        if slot_state is None:
+            return cache
+        ss, cs = slot_state
+        cache["ssm_state"] = cache["ssm_state"].at[:, slot].set(ss)
+        cache["conv_state"] = cache["conv_state"].at[:, slot].set(cs)
+        return cache
+
+    def _write_prefill(self, cache: dict, kvs, slot: int,
+                       block_row: np.ndarray, seq_len: int) -> dict:
+        """Scatter one trace's prefill KV/state into the shared pool."""
+        attn_kvs, slot_state = self._split_prefill_kvs(kvs)
+        cache = self._write_prefix_kv(cache, attn_kvs, block_row, seq_len)
+        return self._write_slot_state(cache, slot_state, slot)
 
     def _clear_slot_state(self, cache: dict, slot: int) -> dict:
         if "ssm_state" in cache:
@@ -192,102 +306,159 @@ class Engine:
     def serve(self, prompt_tokens: List[int], n_traces: int,
               request_id: int = 0) -> RequestResult:
         """Generate ``n_traces`` parallel traces for one prompt."""
-        ecfg = self.ecfg
-        assert n_traces <= ecfg.max_batch, "engine sized per trace budget"
+        assert n_traces <= self.ecfg.max_batch, "engine sized per trace budget"
+        req = Request(request_id=request_id,
+                      prompt_tokens=list(prompt_tokens),
+                      n_traces=n_traces, policy=self.policy)
+        return self.serve_batch([req])[0]
+
+    def serve_batch(self, requests: Sequence[Request]) -> List[RequestResult]:
+        """Serve a queue of requests through one shared decode batch.
+
+        Total traces may exceed ``max_batch``: surplus traces wait for a
+        free decode slot. Block-pool contention is cross-request; each
+        request's own policy governs pruning of its traces.
+        """
         t_start = time.perf_counter()
-
-        traces = [Trace(trace_id=i, request_id=request_id,
-                        prompt_tokens=list(prompt_tokens))
-                  for i in range(n_traces)]
-        waiting: List[Trace] = list(traces)
-        # DeepConf online: first `warmup` traces run as a closed warmup set
-        if isinstance(self.policy, DeepConfPolicy):
-            self.policy.threshold = None  # fresh threshold per request
-            head = waiting[:self.policy.warmup]
-            tail = waiting[self.policy.warmup:]
-            res_head = self._run_pass(head, t_start)
-            self.policy.record_warmup(
-                [t for t in head if t.status == TraceStatus.FINISHED])
-            if tail:
-                res_tail = self._run_pass(tail, time.perf_counter())
+        states: List[_ReqState] = []
+        for req in requests:
+            if req.policy is not None:
+                policy = req.policy
+            elif len(requests) == 1:
+                policy = self.policy
             else:
-                res_tail = {k: 0.0 for k in res_head}
-            stats = {k: res_head[k] + res_tail[k] for k in res_head}
-        else:
-            stats = self._run_pass(waiting, t_start)
+                # stateful policies (DeepConf threshold, Slim-SC cursors)
+                # must not leak between concurrent requests: give each
+                # request its own copy of the engine-level default
+                policy = copy.deepcopy(self.policy)
+            if isinstance(policy, DeepConfPolicy):
+                policy.threshold = None  # fresh threshold per request
+            traces = [Trace(trace_id=i, request_id=req.request_id,
+                            prompt_tokens=list(req.prompt_tokens))
+                      for i in range(req.n_traces)]
+            states.append(_ReqState(req, policy, traces))
 
-        finished = [t for t in traces if t.status == TraceStatus.FINISHED]
-        answer = self.policy.vote(finished) if finished else None
-        latency = time.perf_counter() - t_start
-        return RequestResult(
-            request_id=request_id, answer=answer, traces=traces,
-            latency_s=latency,
-            total_tokens=sum(t.num_tokens for t in traces),
-            wait_s=sum(t.wait_time for t in traces),
-            decode_s=stats["decode_s"], prefill_s=stats["prefill_s"],
-            num_pruned=sum(t.status == TraceStatus.PRUNED for t in traces),
-            num_preemptions=sum(max(t.prefill_count - 1, 0) for t in traces),
-        )
+        peak_blocks = self._run_scheduler(states)
+
+        t_end = time.perf_counter()
+        results = []
+        for st in states:
+            finished = [t for t in st.traces
+                        if t.status == TraceStatus.FINISHED]
+            answer = st.policy.vote(finished) if finished else None
+            done = st.t_done if st.t_done is not None else t_end
+            results.append(RequestResult(
+                request_id=st.request_id, answer=answer, traces=st.traces,
+                latency_s=done - t_start,
+                total_tokens=sum(t.num_tokens for t in st.traces),
+                wait_s=sum(t.wait_time for t in st.traces),
+                decode_s=st.decode_s, prefill_s=st.prefill_s,
+                num_pruned=sum(t.status == TraceStatus.PRUNED
+                               for t in st.traces),
+                num_preemptions=sum(max(t.prefill_count - 1, 0)
+                                    for t in st.traces),
+                peak_blocks_used=peak_blocks,
+            ))
+        return results
 
     # ------------------------------------------------------------------
-    def _run_pass(self, waiting: List[Trace], t0: float) -> Dict[str, float]:
-        """Run one closed set of traces to completion/pruning."""
+    def _run_scheduler(self, states: List[_ReqState]) -> int:
+        """Run every request's traces to completion/pruning. Returns the
+        pool-wide peak block usage."""
         ecfg, cfg, tok = self.ecfg, self.cfg, self.tok
         B = ecfg.max_batch
         bs = cfg.kv_block_size
+        cap = ecfg.capacity
+        share = ecfg.share_prompt_prefix
+        mgr = self.block_mgr
         cache = self._init_cache()
+        by_req: Dict[int, _ReqState] = {st.request_id: st for st in states}
+        assert len(by_req) == len(states), "duplicate request_id in batch"
 
         block_tables = np.zeros((B, self.blocks_per_seq), np.int32)
         positions = np.zeros((B,), np.int32)
         cur_tokens = np.zeros((B,), np.int32)
-        slot_of: Dict[int, int] = {}
         free_slots = list(range(B))
         running: List[Trace] = []
-        waiting = list(waiting)
-        for t in waiting:
-            t.status = TraceStatus.WAITING
-            # wait_time counts only MEMORY-induced waiting (paper Table 3):
-            # the clock starts at preemption or at a memory-blocked
-            # admission attempt, not at submission.
-            t.runnable_since = -1.0
+        waiting: List[Trace] = []
+        for st in states:
+            for t in st.traces:
+                t.status = TraceStatus.WAITING
+                # wait_time counts only MEMORY-induced waiting (paper
+                # Table 3): the clock starts at preemption or at a
+                # memory-blocked admission attempt, not at submission.
+                t.runnable_since = -1.0
+            waiting.extend(st.traces)
 
-        prefill_s = decode_s = 0.0
+        peak_blocks = 0
+
+        def note_peak():
+            nonlocal peak_blocks
+            peak_blocks = max(peak_blocks, mgr.used_blocks)
+
+        def release_prefix(st: _ReqState):
+            if st.prefix is not None:
+                mgr.free(st.prefix.blocks)
+                st.prefix = None
 
         def release(trace: Trace, status: TraceStatus):
             nonlocal cache
             if trace.blocks:
-                self.block_mgr.free(trace.blocks)
+                mgr.free(trace.blocks)
                 trace.blocks = []
             if trace.batch_slot >= 0:
                 s = trace.batch_slot
-                block_tables[s, :] = self.block_mgr.scratch_block
+                block_tables[s, :] = mgr.scratch_block
                 positions[s] = 0
                 cache = self._clear_slot_state(cache, s)
                 free_slots.append(s)
-                slot_of.pop(trace.trace_id, None)
                 trace.batch_slot = -1
             trace.status = status
             if trace in running:
                 running.remove(trace)
+            st = by_req[trace.request_id]
+            if st.done():
+                release_prefix(st)
+                if st.t_done is None:
+                    st.t_done = time.perf_counter()
 
-        def handle_memory_full(needy: Optional[Trace],
+        def reclaim_idle_prefix(skip_rid: int) -> bool:
+            """Free shared-prefix blocks of requests with no running
+            trace (their waiting traces recompute on readmission). Never
+            touches ``skip_rid``: freeing the needy request's own prefix
+            would report progress while undoing its admission work (an
+            admit/prefill livelock)."""
+            before = mgr.free_blocks
+            live = {t.request_id for t in running}
+            live.add(skip_rid)
+            for st in states:
+                if st.prefix is not None and st.request_id not in live:
+                    release_prefix(st)
+            return mgr.free_blocks > before
+
+        def handle_memory_full(needy: Optional[Trace], rid: int,
                                at_admission: bool = False) -> bool:
             """Pool has no free block. Returns True if progress was made.
 
-            STEP: prune the lowest-scored running trace, free its blocks —
-            the waiting queue never forms.
+            STEP: the needy request's policy prunes its lowest-scored
+            running trace, freeing its blocks — the waiting queue never
+            forms.
             Baselines: at admission the new trace simply WAITS (vLLM does
             not evict running work for new arrivals); mid-decode, the
-            last-arrived running trace is PREEMPTED (discard-and-recompute)
-            into the waiting queue.
+            last-arrived running trace (any request) is PREEMPTED
+            (discard-and-recompute) into the waiting queue.
             """
-            victim = self.policy.on_memory_full(running)
+            st = by_req[rid]
+            own_running = [t for t in running if t.request_id == rid]
+            victim = st.policy.on_memory_full(own_running)
             if victim is not None:  # STEP prune
-                if len(running) <= 1 and needy is victim:
+                if len(own_running) <= 1 and needy is victim:
                     # sole survivor: finish (truncate) instead of self-prune
                     finish(victim)
                     return True
                 release(victim, TraceStatus.PRUNED)
+                return True
+            if reclaim_idle_prefix(skip_rid=rid):
                 return True
             if at_admission or not running:
                 return False  # baseline: queue the arrival, keep decoding
@@ -309,93 +480,229 @@ class Engine:
             trace.answer = extract_answer(text)
             release(trace, TraceStatus.FINISHED)
 
-        def try_admit() -> None:
-            nonlocal cache, prefill_s
-            while waiting and free_slots:
-                trace = waiting[0]
-                ids = trace.prompt_tokens + trace.output_tokens
-                need = self.block_mgr.blocks_for_tokens(
-                    min(len(ids) + 1, ecfg.capacity))
-                if not self.block_mgr.can_allocate(need):
-                    # memory full at admission: STEP prunes, baselines wait
-                    if trace.runnable_since < 0:
-                        trace.runnable_since = time.perf_counter()
-                    if not handle_memory_full(None, at_admission=True):
-                        return
-                    if not self.block_mgr.can_allocate(need):
-                        return
-                    continue
-                waiting.pop(0)
-                blocks = self.block_mgr.allocate(need)
-                slot = free_slots.pop(0)
-                if trace.runnable_since >= 0:
-                    trace.wait_time += time.perf_counter() - trace.runnable_since
-                    trace.runnable_since = -1.0
-                trace.blocks = blocks
-                trace.batch_slot = slot
-                trace.status = TraceStatus.RUNNING
-                trace.prefill_count += 1
-                slot_of[trace.trace_id] = slot
-                running.append(trace)
+        def ensure_prefix(st: _ReqState, trace: Trace) -> Optional[bool]:
+            """Build the request's shared prompt prefill on demand.
 
-                row = np.full((self.blocks_per_seq,), 0, np.int32)
-                row[:len(blocks)] = blocks
-                block_tables[slot] = row
-                t_pf = time.perf_counter()
-                ids_arr = jnp.asarray(np.array(ids, np.int32)[None, :])
-                logits, kvs = self._prefill(self.params, ids_arr)
-                cache_new = self._write_prefill(cache, kvs, slot, row,
-                                                len(ids))
-                # next token continues from the last prefill logit
-                positions[slot] = len(ids)
-                cur_tokens[slot] = int(jnp.argmax(logits[0, -1]))
-                # sample the first new token properly
-                self._rng, k = jax.random.split(self._rng)
-                sp = ecfg.sampling
-                nt, conf = sample_tokens(
-                    k, logits[:, -1], temperature=sp.temperature,
-                    top_k=sp.top_k, top_p=sp.top_p)
-                cur_tokens[slot] = int(nt[0])
-                trace.output_tokens.append(int(nt[0]))
-                trace.token_confidences.append(float(conf[0]))
-                cache = cache_new
-                prefill_s += time.perf_counter() - t_pf
+            True: prefix ready. False: memory action made progress, retry
+            admission. None: memory full and nothing to free — queue.
+            """
+            nonlocal cache
+            if st.prefix is not None:
+                return True
+            seq_len = len(trace.prompt_tokens)
+            need = mgr.blocks_for_tokens(seq_len)
+            # need + 1: the admitting trace's first private (COW) block
+            # must fit too, or the headroom check right after us fails
+            # and the just-computed prefill is wasted (worst case: an
+            # endless build/reclaim/rebuild cycle)
+            if not mgr.can_allocate(need + 1):
+                if trace.runnable_since < 0:
+                    trace.runnable_since = time.perf_counter()
+                if not handle_memory_full(None, st.request_id,
+                                          at_admission=True):
+                    return None
+                return False
+            blocks = mgr.allocate(need)
+            note_peak()
+            row = np.zeros((self.blocks_per_seq,), np.int32)
+            row[:len(blocks)] = blocks
+            t_pf = time.perf_counter()
+            ids_arr = jnp.asarray(
+                np.array(trace.prompt_tokens, np.int32)[None, :])
+            logits, kvs = self._prefill(self.params, ids_arr)
+            attn_kvs, slot_state = self._split_prefill_kvs(kvs)
+            cache = self._write_prefix_kv(cache, attn_kvs, row, seq_len)
+            st.prefix = _SharedPrefix(blocks=blocks, seq_len=seq_len,
+                                      last_logits=logits[:, -1],
+                                      slot_state=slot_state)
+            st.prefill_s += time.perf_counter() - t_pf
+            return True
+
+        def admit_shared(trace: Trace, st: _ReqState,
+                         pending: List[Trace]) -> None:
+            """Fork the request's prompt blocks into a fresh trace."""
+            nonlocal cache
+            prefix = st.prefix
+            waiting.remove(trace)
+            slot = free_slots.pop(0)
+            if trace.runnable_since >= 0:
+                trace.wait_time += time.perf_counter() - trace.runnable_since
+                trace.runnable_since = -1.0
+            trace.blocks = mgr.fork(prefix.blocks)
+            trace.batch_slot = slot
+            trace.status = TraceStatus.RUNNING
+            trace.prefill_count += 1
+            running.append(trace)
+            row = np.zeros((self.blocks_per_seq,), np.int32)
+            row[:len(trace.blocks)] = trace.blocks
+            block_tables[slot] = row
+            positions[slot] = prefix.seq_len
+            if prefix.slot_state is not None:
+                cache = self._write_slot_state(cache, prefix.slot_state, slot)
+            pending.append(trace)
+
+        def admit_private(trace: Trace, st: _ReqState) -> None:
+            """Original per-trace path: full prefill into private blocks
+            (flag off, prompt > capacity, or preempted-trace recompute)."""
+            nonlocal cache
+            ids = trace.prompt_tokens + trace.output_tokens
+            need = mgr.blocks_for_tokens(min(len(ids) + 1, cap))
+            waiting.remove(trace)
+            blocks = mgr.allocate(need)
+            note_peak()
+            slot = free_slots.pop(0)
+            if trace.runnable_since >= 0:
+                trace.wait_time += time.perf_counter() - trace.runnable_since
+                trace.runnable_since = -1.0
+            trace.blocks = blocks
+            trace.batch_slot = slot
+            trace.status = TraceStatus.RUNNING
+            trace.prefill_count += 1
+            running.append(trace)
+
+            row = np.zeros((self.blocks_per_seq,), np.int32)
+            row[:len(blocks)] = blocks
+            block_tables[slot] = row
+            t_pf = time.perf_counter()
+            ids_arr = jnp.asarray(np.array(ids, np.int32)[None, :])
+            logits, kvs = self._prefill(self.params, ids_arr)
+            cache_new = self._write_prefill(cache, kvs, slot, row, len(ids))
+            # next token continues from the last prefill logit
+            positions[slot] = len(ids)
+            self._rng, k = jax.random.split(self._rng)
+            sp = ecfg.sampling
+            nt, conf = sample_tokens(
+                k, logits[:, -1], temperature=sp.temperature,
+                top_k=sp.top_k, top_p=sp.top_p)
+            cur_tokens[slot] = int(nt[0])
+            trace.output_tokens.append(int(nt[0]))
+            trace.token_confidences.append(float(conf[0]))
+            cache = cache_new
+            st.prefill_s += time.perf_counter() - t_pf
+
+        def flush_first_tokens(pending: List[Trace]) -> None:
+            """Batch the first-token sampling for every trace admitted via
+            prefix forking in this admission wave (one device call)."""
+            live = [t for t in pending if t.status == TraceStatus.RUNNING]
+            if not live:
+                return
+            logits = jnp.concatenate(
+                [by_req[t.request_id].prefix.last_logits for t in live],
+                axis=0)  # [m, Vp]
+            self._rng, k = jax.random.split(self._rng)
+            sp = ecfg.sampling
+            nt, conf = sample_tokens(
+                k, logits, temperature=sp.temperature,
+                top_k=sp.top_k, top_p=sp.top_p)
+            nt = np.asarray(nt)
+            conf = np.asarray(conf)
+            for i, trace in enumerate(live):
+                cur_tokens[trace.batch_slot] = int(nt[i])
+                trace.output_tokens.append(int(nt[i]))
+                trace.token_confidences.append(float(conf[i]))
+
+        def try_admit() -> None:
+            pending: List[Trace] = []
+            while free_slots:
+                trace = next((t for t in waiting
+                              if by_req[t.request_id].admissible(t)), None)
+                if trace is None:
+                    break
+                st = by_req[trace.request_id]
+                # sharing needs prompt blocks + one private block to ever
+                # fit the pool; pathologically small pools fall back to
+                # the per-trace path (which can truncate-finish)
+                prefix_fits = (mgr.blocks_for_tokens(
+                    len(trace.prompt_tokens)) + 1 <= ecfg.num_blocks - 1)
+                fresh = (share and not trace.output_tokens
+                         and len(trace.prompt_tokens) <= cap
+                         and prefix_fits)
+                if fresh:
+                    ok = ensure_prefix(st, trace)
+                    if ok is None:
+                        break
+                    if ok is False:
+                        continue
+                    # headroom for this trace's first private block (the
+                    # COW copy of the prompt's tail block, or a fresh
+                    # block when the prompt ends exactly on a boundary)
+                    if not mgr.can_allocate(1):
+                        if trace.runnable_since < 0:
+                            trace.runnable_since = time.perf_counter()
+                        if not handle_memory_full(None, st.request_id,
+                                                  at_admission=True):
+                            break
+                        continue
+                    admit_shared(trace, st, pending)
+                else:
+                    ids_len = len(trace.prompt_tokens) + \
+                        len(trace.output_tokens)
+                    need = mgr.blocks_for_tokens(min(ids_len + 1, cap))
+                    if not mgr.can_allocate(need):
+                        # memory full at admission: STEP prunes,
+                        # baselines wait
+                        if trace.runnable_since < 0:
+                            trace.runnable_since = time.perf_counter()
+                        if not handle_memory_full(None, st.request_id,
+                                                  at_admission=True):
+                            break
+                        if not mgr.can_allocate(need):
+                            break
+                        continue
+                    admit_private(trace, st)
+            flush_first_tokens(pending)
 
         # ------------------------------------------------------------
         # main loop
         # ------------------------------------------------------------
         while waiting or running:
+            for st in states:
+                st.update_gate()
             try_admit()
             if not running:
                 if waiting:  # deadlocked on memory: should not happen
                     raise RuntimeError("no trace schedulable")
                 break
 
-            # ensure every running trace owns the block for its next token
+            # ensure every running trace exclusively owns the block its
+            # next token's KV will be written into: allocate fresh blocks
+            # at the growth frontier, copy-on-write still-shared (prompt)
+            # blocks
             progress = True
             for trace in list(running):
                 slot = trace.batch_slot
                 pos = int(positions[slot])
-                if pos >= ecfg.capacity:
-                    continue  # rolling window, block already owned
-                bidx = pos // bs
-                if bidx < len(trace.blocks):
+                widx = pos % cap  # decode writes at positions % window
+                bidx = widx // bs
+                if bidx < len(trace.blocks) and \
+                        not mgr.is_shared(trace.blocks[bidx]):
                     continue
-                while not self.block_mgr.can_allocate(1):
-                    if not handle_memory_full(trace):
+                while not mgr.can_allocate(1):
+                    if not handle_memory_full(trace, trace.request_id):
                         progress = False
                         break
                     if trace.status != TraceStatus.RUNNING:
                         break  # the needy trace itself was pruned/preempted
                 if trace.status != TraceStatus.RUNNING or not progress:
                     continue
-                blk = self.block_mgr.allocate(1)
-                trace.blocks.extend(blk)
-                block_tables[trace.batch_slot, bidx] = blk[0]
+                blk = mgr.allocate(1)
+                note_peak()
+                if bidx < len(trace.blocks):
+                    # COW: first write into a shared prompt block
+                    old = trace.blocks[bidx]
+                    cache = self._copy_block(cache, old, blk[0])
+                    mgr.free([old])
+                    trace.blocks[bidx] = blk[0]
+                else:
+                    trace.blocks.extend(blk)
+                block_tables[slot, bidx] = blk[0]
             if not running:
                 continue
 
             # one fixed-shape batched decode step
+            n_by_req: Dict[int, int] = {}
+            for t in running:
+                n_by_req[t.request_id] = n_by_req.get(t.request_id, 0) + 1
             t_dec = time.perf_counter()
             self._rng, k = jax.random.split(self._rng)
             new_tokens, conf, scores, cache = self._decode(
@@ -407,15 +714,19 @@ class Engine:
             new_tokens = np.asarray(new_tokens)
             conf = np.asarray(conf)
             scores = np.asarray(scores)
-            decode_s += time.perf_counter() - t_dec
+            dt = time.perf_counter() - t_dec
+            tot = sum(n_by_req.values())
+            for rid, n in n_by_req.items():
+                by_req[rid].decode_s += dt * n / tot
 
             for trace in list(running):
+                st = by_req[trace.request_id]
                 slot = trace.batch_slot
                 prev_token = int(cur_tokens[slot])
                 nt = int(new_tokens[slot])
                 # the score is for the hidden state of prev_token (the one
                 # just consumed by this step); boundary => step end
-                if prev_token == tok.step_id and self.policy.uses_scorer:
+                if prev_token == tok.step_id and st.policy.uses_scorer:
                     trace.add_step_score(float(scores[slot]))
                 trace.output_tokens.append(nt)
                 trace.token_confidences.append(float(conf[slot]))
@@ -425,8 +736,14 @@ class Engine:
                     finish(trace)
 
             # signal-triggered termination (DeepConf / Slim-SC)
-            for trace in self.policy.traces_to_terminate(running):
-                if trace.status == TraceStatus.RUNNING:
-                    release(trace, TraceStatus.PRUNED)
+            for st in states:
+                own = [t for t in running if t.request_id == st.request_id]
+                if not own:
+                    continue
+                for trace in st.policy.traces_to_terminate(own):
+                    if trace.status == TraceStatus.RUNNING:
+                        release(trace, TraceStatus.PRUNED)
 
-        return {"prefill_s": prefill_s, "decode_s": decode_s}
+        for st in states:  # defensive: no prefix may outlive its batch
+            release_prefix(st)
+        return peak_blocks

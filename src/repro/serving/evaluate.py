@@ -15,7 +15,7 @@ from repro.configs.base import ModelConfig
 from repro.core.pruning import make_policy
 from repro.data.arithmetic import Problem, gen_problem, make_prompt
 from repro.data.tokenizer import get_tokenizer
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, Request
 
 
 @dataclasses.dataclass
@@ -39,26 +39,13 @@ def make_problems(n: int, seed: int = 1234,
     return [gen_problem(rng, n_steps) for _ in range(n)]
 
 
-def evaluate_method(method: str, params: dict, cfg: ModelConfig,
-                    problems: List[Problem], n_traces: int,
-                    ecfg: EngineConfig,
-                    scorer_params: Optional[dict] = None,
-                    policy_kwargs: Optional[dict] = None,
-                    verbose: bool = False) -> EvalResult:
-    tok = get_tokenizer()
-    policy_kwargs = dict(policy_kwargs or {})
-    if method == "cot":
-        n_traces = 1
+def _aggregate(method: str, n_traces: int, problems: List[Problem],
+               results, verbose: bool = False) -> EvalResult:
+    """Fold per-request RequestResults into the paper's three metrics."""
     records = []
     totals = dict(wait=0.0, decode=0.0, prefill=0.0, pruned=0, preempt=0)
     correct = 0
-    for qid, p in enumerate(problems):
-        policy = make_policy(method, **policy_kwargs)
-        engine = Engine(params, cfg, ecfg, policy,
-                        scorer_params=scorer_params
-                        if policy.uses_scorer else None)
-        prompt = tok.encode(make_prompt(p), add_bos=True)
-        res = engine.serve(prompt, n_traces, request_id=qid)
+    for p, res in zip(problems, results):
         ok = res.answer is not None and int(res.answer) == p.answer
         correct += ok
         totals["wait"] += res.wait_s
@@ -67,15 +54,15 @@ def evaluate_method(method: str, params: dict, cfg: ModelConfig,
         totals["pruned"] += res.num_pruned
         totals["preempt"] += res.num_preemptions
         records.append({
-            "qid": qid, "answer": res.answer, "gold": p.answer,
+            "qid": res.request_id, "answer": res.answer, "gold": p.answer,
             "correct": bool(ok), "tokens": res.total_tokens,
             "latency_s": res.latency_s, "wait_s": res.wait_s,
             "decode_s": res.decode_s, "prefill_s": res.prefill_s,
             "pruned": res.num_pruned, "preemptions": res.num_preemptions,
         })
         if verbose:
-            print(f"  [{method}] q{qid}: ans={res.answer} gold={p.answer} "
-                  f"ok={ok} tok={res.total_tokens} "
+            print(f"  [{method}] q{res.request_id}: ans={res.answer} "
+                  f"gold={p.answer} ok={ok} tok={res.total_tokens} "
                   f"lat={res.latency_s:.2f}s wait={res.wait_s:.2f}s")
     n = max(len(problems), 1)
     return EvalResult(
@@ -87,3 +74,56 @@ def evaluate_method(method: str, params: dict, cfg: ModelConfig,
         total_prefill_s=totals["prefill"],
         num_pruned=totals["pruned"], num_preemptions=totals["preempt"],
         per_problem=records)
+
+
+def evaluate_method(method: str, params: dict, cfg: ModelConfig,
+                    problems: List[Problem], n_traces: int,
+                    ecfg: EngineConfig,
+                    scorer_params: Optional[dict] = None,
+                    policy_kwargs: Optional[dict] = None,
+                    verbose: bool = False) -> EvalResult:
+    """One engine + one request at a time — the paper's serial setting."""
+    tok = get_tokenizer()
+    policy_kwargs = dict(policy_kwargs or {})
+    if method == "cot":
+        n_traces = 1
+    results = []
+    for qid, p in enumerate(problems):
+        policy = make_policy(method, **policy_kwargs)
+        engine = Engine(params, cfg, ecfg, policy,
+                        scorer_params=scorer_params
+                        if policy.uses_scorer else None)
+        prompt = tok.encode(make_prompt(p), add_bos=True)
+        results.append(engine.serve(prompt, n_traces, request_id=qid))
+    return _aggregate(method, n_traces, problems, results, verbose=verbose)
+
+
+def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
+                            problems: List[Problem], n_traces: int,
+                            ecfg: EngineConfig,
+                            scorer_params: Optional[dict] = None,
+                            policy_kwargs: Optional[dict] = None,
+                            verbose: bool = False) -> EvalResult:
+    """All problems submitted to ONE engine as a request queue: traces of
+    different requests co-exist in the decode batch and contend for the
+    shared block pool (the multi-request serving scenario). Each request
+    gets a fresh policy instance so stateful policies (DeepConf warmup
+    threshold, Slim-SC cursors) don't leak across concurrent requests.
+    """
+    tok = get_tokenizer()
+    policy_kwargs = dict(policy_kwargs or {})
+    if method == "cot":
+        n_traces = 1
+    requests = [
+        Request(request_id=qid,
+                prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
+                n_traces=n_traces,
+                policy=make_policy(method, **policy_kwargs))
+        for qid, p in enumerate(problems)
+    ]
+    default_policy = make_policy(method, **policy_kwargs)
+    engine = Engine(params, cfg, ecfg, default_policy,
+                    scorer_params=scorer_params
+                    if default_policy.uses_scorer else None)
+    results = engine.serve_batch(requests)
+    return _aggregate(method, n_traces, problems, results, verbose=verbose)

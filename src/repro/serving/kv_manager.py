@@ -7,11 +7,21 @@ budget; this manager hands out block ids. "GPU memory full" in the paper
 Block 0 is reserved as a scratch block: dead decode slots point their
 block tables at it so a fixed-shape batched decode step can run without
 corrupting live sequences.
+
+Prefix sharing (vLLM-style copy-on-write): every live block carries a
+reference count. ``fork(blocks)`` hands the same physical blocks to a
+second logical sequence by incrementing the counts; ``free`` decrements
+and only returns a block to the free list when its count reaches zero.
+A writer must hold a block exclusively — the engine checks
+``is_shared`` before the next token's KV write and, if the block is
+shared, allocates a fresh block, device-copies the contents, and drops
+its reference on the original (the COW step). The allocator itself
+never touches device memory; it only tracks ownership.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -22,7 +32,8 @@ class BlockManager:
     def __post_init__(self):
         assert self.num_blocks >= 2
         self._free: List[int] = list(range(1, self.num_blocks))  # 0=scratch
-        self._allocated = 0
+        self._free_set = set(self._free)  # O(1) membership / double-free check
+        self._refcounts: Dict[int, int] = {}  # block id -> refs (live only)
 
     @property
     def scratch_block(self) -> int:
@@ -51,13 +62,46 @@ class BlockManager:
             return None
         out = self._free[:n_blocks]
         del self._free[:n_blocks]
+        for b in out:
+            self._free_set.discard(b)
+            self._refcounts[b] = 1
         return out
 
-    def free(self, blocks: List[int]) -> None:
+    def fork(self, blocks: List[int]) -> List[int]:
+        """Share ``blocks`` with one more logical sequence (refcount += 1).
+
+        Returns a fresh list of the same physical block ids; the caller
+        owns one reference per id and releases it through ``free``.
+        """
         for b in blocks:
-            assert b != 0 and b not in self._free, f"double free of block {b}"
-            self._free.append(b)
+            assert self._refcounts.get(b, 0) > 0, f"fork of dead block {b}"
+            self._refcounts[b] += 1
+        return list(blocks)
+
+    def ref_count(self, block: int) -> int:
+        return self._refcounts.get(block, 0)
+
+    def is_shared(self, block: int) -> bool:
+        return self._refcounts.get(block, 0) > 1
+
+    def free(self, blocks: List[int]) -> None:
+        """Drop one reference per block; release at refcount zero."""
+        for b in blocks:
+            assert b != 0 and b not in self._free_set, f"double free of {b}"
+            refs = self._refcounts.get(b, 0)
+            assert refs > 0, f"free of unallocated block {b}"
+            if refs > 1:
+                self._refcounts[b] = refs - 1
+            else:
+                del self._refcounts[b]
+                self._free.append(b)
+                self._free_set.add(b)
 
     def check_invariants(self) -> None:
         assert len(set(self._free)) == len(self._free)
+        assert self._free_set == set(self._free)
         assert all(1 <= b < self.num_blocks for b in self._free)
+        assert all(r > 0 for r in self._refcounts.values())
+        # every non-scratch block is exactly one of {free, live}
+        assert not (self._free_set & self._refcounts.keys())
+        assert len(self._free) + len(self._refcounts) == self.num_blocks - 1

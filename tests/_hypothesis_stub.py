@@ -1,0 +1,93 @@
+"""Minimal, dependency-free fallback for the slice of the ``hypothesis``
+API this repo's property tests use.
+
+Loaded by ``tests/conftest.py`` ONLY when the real ``hypothesis`` package
+is not installed (e.g. a hermetic container without network access). It
+is not a shrinker — just a seeded random-example runner with the same
+decorator surface — so failures reproduce deterministically but are not
+minimized. CI installs the real package via ``pip install -e .[test]``
+and never sees this module.
+
+Supported: ``given``, ``settings(max_examples=, deadline=)``, and the
+strategies ``integers``, ``booleans``, ``sampled_from``, ``lists``,
+``tuples``, ``composite``.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example_with(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example_with(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda rng: tuple(s.example_with(rng) for s in strategies))
+
+
+def composite(fn):
+    """``@st.composite`` — ``fn(draw, *args)`` builder."""
+    def make(*args, **kwargs):
+        def draw_value(rng):
+            def draw(strategy):
+                return strategy.example_with(rng)
+            return fn(draw, *args, **kwargs)
+        return _Strategy(draw_value)
+    return make
+
+
+def given(*strategies: _Strategy):
+    """Run the test body over seeded random examples of the strategies."""
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed so failures reproduce
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                vals = [s.example_with(rng) for s in strategies]
+                fn(*args, *vals, **kwargs)
+        # no functools.wraps: pytest must see (*args, **kwargs), not the
+        # original signature, or it would treat drawn params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+    return deco

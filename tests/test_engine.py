@@ -8,7 +8,7 @@ from repro.core.scorer import init_scorer
 from repro.core.trace import TraceStatus
 from repro.data.tokenizer import get_tokenizer
 from repro.models.init import init_params
-from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
 
 @pytest.fixture(scope="module")
@@ -115,3 +115,103 @@ def test_trace_budget_respected(setup):
     _, res = _run(setup, "sc", n=4)
     assert len(res.traces) == 4
     assert res.total_tokens <= 4 * 48
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing (COW) + multi-request scheduling
+# ---------------------------------------------------------------------------
+
+def _greedy_ecfg(share, num_blocks=64, max_new=32, batch=8):
+    return EngineConfig(
+        max_batch=batch, num_blocks=num_blocks, capacity=128,
+        max_new_tokens=max_new,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=max_new),
+        share_prompt_prefix=share)
+
+
+def test_shared_prefix_matches_per_trace_greedy(setup):
+    """The COW fork must be invisible to the model: under greedy sampling
+    both prefill modes generate token-identical traces."""
+    cfg, params, _, prompt = setup
+    outs = []
+    for share in (True, False):
+        eng = Engine(params, cfg, _greedy_ecfg(share), make_policy("sc"))
+        res = eng.serve(prompt, 6)
+        assert all(t.status == TraceStatus.FINISHED for t in res.traces)
+        outs.append([t.output_tokens for t in res.traces])
+        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        eng.block_mgr.check_invariants()
+    assert outs[0] == outs[1]
+
+
+def test_shared_prefix_prefills_once(setup):
+    """N traces of one request => exactly one prompt prefill (vs N)."""
+    cfg, params, _, prompt = setup
+    for share, expected in ((True, 1), (False, 6)):
+        eng = Engine(params, cfg, _greedy_ecfg(share), make_policy("sc"))
+        calls = []
+        orig = eng._prefill
+        eng._prefill = lambda p, t: (calls.append(t.shape) or orig(p, t))
+        eng.serve(prompt, 6)
+        assert len(calls) == expected
+
+
+def test_serve_batch_multi_request(setup):
+    """Traces of different requests co-exist in the decode batch; results
+    aggregate per request and the pool drains clean."""
+    cfg, params, _, prompt = setup
+    tok = get_tokenizer()
+    eng = Engine(params, cfg, _greedy_ecfg(True, max_new=24),
+                 make_policy("sc"))
+    reqs = [
+        Request(request_id=7, prompt_tokens=prompt, n_traces=4,
+                policy=make_policy("sc")),
+        Request(request_id=9,
+                prompt_tokens=tok.encode("7*2+1=", add_bos=True),
+                n_traces=4, policy=make_policy("sc")),
+    ]
+    results = eng.serve_batch(reqs)
+    assert [r.request_id for r in results] == [7, 9]
+    for r in results:
+        assert len(r.traces) == 4
+        assert all(t.request_id == r.request_id for t in r.traces)
+        assert all(t.status == TraceStatus.FINISHED for t in r.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    eng.block_mgr.check_invariants()
+
+
+def test_serve_batch_queues_beyond_max_batch(setup):
+    """More total traces than decode slots: surplus waits for a slot and
+    still completes (slot waiting is not memory WAIT)."""
+    cfg, params, _, prompt = setup
+    eng = Engine(params, cfg, _greedy_ecfg(True, max_new=16, batch=4),
+                 make_policy("sc"))
+    reqs = [Request(request_id=i, prompt_tokens=prompt, n_traces=3,
+                    policy=make_policy("sc")) for i in range(3)]
+    results = eng.serve_batch(reqs)
+    for r in results:
+        assert all(t.status == TraceStatus.FINISHED for t in r.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_serve_batch_step_cross_request_contention(setup):
+    """Two STEP requests contending for one tight pool: each request's
+    policy prunes its own traces, no request ever waits."""
+    cfg, params, scorer, prompt = setup
+    ecfg = EngineConfig(max_batch=8, num_blocks=12, capacity=128,
+                        max_new_tokens=100,
+                        sampling=SamplingParams(max_new_tokens=100))
+    eng = Engine(params, cfg, ecfg, make_policy("step"),
+                 scorer_params=scorer)
+    reqs = [Request(request_id=i, prompt_tokens=prompt, n_traces=4,
+                    policy=make_policy("step")) for i in range(2)]
+    results = eng.serve_batch(reqs)
+    assert sum(r.num_pruned for r in results) > 0
+    for r in results:
+        assert r.wait_s == 0.0
+        assert r.num_preemptions == 0
+        assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
+                   for t in r.traces)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    eng.block_mgr.check_invariants()

@@ -1,0 +1,126 @@
+"""Allocator semantics for prefix sharing: refcounts, fork, COW, and the
+free-list invariants under adversarial interleavings."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.registry import serving_config
+from repro.models.model import copy_kv_block
+from repro.serving.kv_manager import BlockManager
+
+
+def test_fork_increments_refcounts():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    blocks = mgr.allocate(3)
+    assert all(mgr.ref_count(b) == 1 for b in blocks)
+    assert not any(mgr.is_shared(b) for b in blocks)
+    forked = mgr.fork(blocks)
+    assert forked == blocks  # same physical blocks
+    assert forked is not blocks  # fresh list: callers mutate independently
+    assert all(mgr.ref_count(b) == 2 for b in blocks)
+    assert all(mgr.is_shared(b) for b in blocks)
+    # forking holds no new physical memory
+    assert mgr.used_blocks == 3
+
+
+def test_free_releases_only_at_refcount_zero():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    blocks = mgr.allocate(2)
+    forked = mgr.fork(blocks)
+    mgr.free(forked)
+    # still held by the original owner
+    assert mgr.used_blocks == 2
+    assert all(mgr.ref_count(b) == 1 for b in blocks)
+    mgr.free(blocks)
+    assert mgr.used_blocks == 0
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_double_free_still_asserts():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    blocks = mgr.allocate(1)
+    mgr.free(blocks)
+    with pytest.raises(AssertionError, match="double free"):
+        mgr.free(blocks)
+
+
+def test_free_of_scratch_or_unallocated_asserts():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    with pytest.raises(AssertionError):
+        mgr.free([0])  # scratch is never owned
+    mgr.allocate(7)  # empty the free list so membership can't catch it
+    with pytest.raises(AssertionError):
+        mgr.fork([99])
+
+
+def test_cow_protocol_releases_only_writer_ref():
+    """The engine's COW step at allocator level: the writer allocates a
+    private block and drops its ref on the shared one; other holders keep
+    reading the original."""
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    prompt = mgr.allocate(2)      # holder (shared-prefix owner)
+    t1 = mgr.fork(prompt)
+    t2 = mgr.fork(prompt)
+    assert mgr.ref_count(prompt[-1]) == 3
+    # t1 writes into the shared tail block -> COW
+    new = mgr.allocate(1)[0]
+    mgr.free([t1[-1]])
+    t1[-1] = new
+    assert mgr.ref_count(prompt[-1]) == 2  # holder + t2, untouched
+    assert mgr.ref_count(new) == 1
+    for owned in (t1, t2, prompt):
+        mgr.free(owned)
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_copy_kv_block_never_mutates_source():
+    """Device-level COW: dst gets a copy, src (the shared block) and every
+    other block are bit-identical afterwards."""
+    cfg = serving_config()
+    L, NB, bs, H, hd = 2, 4, 2, 1, 2
+    k = jnp.arange(L * NB * bs * H * hd, dtype=jnp.float32).reshape(
+        L, NB, bs, H, hd)
+    v = -k
+    cache = {"k_pool": k, "v_pool": v}
+    out = copy_kv_block(cfg, dict(cache), 1, 3)
+    for key, pool in (("k_pool", k), ("v_pool", v)):
+        got = np.asarray(out[key])
+        ref = np.asarray(pool)
+        np.testing.assert_array_equal(got[:, 3], ref[:, 1])  # copied
+        np.testing.assert_array_equal(got[:, :3], ref[:, :3])  # untouched
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 32),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(1, 4)),
+                max_size=60))
+def test_invariants_under_random_alloc_fork_free(num_blocks, ops):
+    """Randomized alloc/fork/free interleaving: no double allocation, the
+    free list and refcounts always partition the pool, and releasing every
+    reference drains back to a full free list."""
+    mgr = BlockManager(num_blocks=num_blocks, block_size=16)
+    held = []  # independently owned reference lists
+    for op, n in ops:
+        if op == 0:
+            blocks = mgr.allocate(n)
+            if blocks is not None:
+                assert len(blocks) == n
+                for b in blocks:
+                    assert b != mgr.scratch_block
+                    assert mgr.ref_count(b) == 1  # fresh, not recycled-live
+                held.append(blocks)
+        elif op == 1 and held:
+            held.append(mgr.fork(held[n % len(held)]))
+        elif op == 2 and held:
+            mgr.free(held.pop(n % len(held)))
+        mgr.check_invariants()
+    # physical usage counts unique blocks, not references
+    assert mgr.used_blocks == len({b for h in held for b in h})
+    for h in held:
+        mgr.free(h)
+    assert mgr.free_blocks == num_blocks - 1
+    mgr.check_invariants()
