@@ -1,0 +1,109 @@
+"""Compare freshly produced BENCH_*.json artifacts against the
+checked-in reference numbers (``benchmarks/reference/``) and fail on
+regression — the gate behind the CI benchmark-smoke job.
+
+    python -m benchmarks.check_regression BENCH_serving.json \
+        BENCH_prefill_sharing.json [--ref-dir benchmarks/reference]
+
+Timing fields are compared with generous ratio bounds (CI runners are
+noisy and share cores); structural fields (completion counts, identical
+greedy outputs having run at all) are compared tightly. Reference files
+are refreshed by copying a blessed run's artifact over the reference and
+committing it — the diff IS the perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REF_DIR = os.path.join(os.path.dirname(__file__), "reference")
+
+# (dotted path, kind, bound) per benchmark.
+#   max_ratio r: new <= ref * r   (lower is better: latencies)
+#   min_ratio r: new >= ref * r   (higher is better: throughput, speedups)
+#   equal:       new == ref       (structural)
+#   min_frac f:  new >= ref * f   (counts that must not collapse)
+RULES = {
+    "serving_load": [
+        ("num_completed", "equal", None),
+        ("num_requests", "equal", None),
+        ("total_output_tokens", "min_frac", 0.8),
+        ("ttft_s.p50", "max_ratio", 5.0),
+        ("ttft_s.p99", "max_ratio", 5.0),
+        ("tpot_s.p50", "max_ratio", 5.0),
+        ("e2e_s.p50", "max_ratio", 5.0),
+        ("e2e_s.p99", "max_ratio", 5.0),
+        ("throughput_tok_per_s", "min_ratio", 0.2),
+    ],
+    "prefill_sharing": [
+        ("prefill_speedup_x", "min_ratio", 0.3),
+        ("peak_blocks_saved", "min_frac", 1.0),
+        ("shared.prefill_s", "max_ratio", 5.0),
+    ],
+}
+
+
+def _get(d: dict, path: str):
+    for part in path.split("."):
+        d = d[part]
+    return d
+
+
+def check(new_path: str, ref_path: str) -> list:
+    with open(new_path) as f:
+        new = json.load(f)
+    with open(ref_path) as f:
+        ref = json.load(f)
+    bench = new.get("benchmark")
+    rules = RULES.get(bench)
+    if rules is None:
+        return [f"{new_path}: unknown benchmark {bench!r}"]
+    problems = []
+    for path, kind, bound in rules:
+        try:
+            nv, rv = _get(new, path), _get(ref, path)
+        except KeyError as e:
+            problems.append(f"{bench}.{path}: missing key {e}")
+            continue
+        if kind == "equal" and nv != rv:
+            problems.append(f"{bench}.{path}: {nv!r} != reference {rv!r}")
+        elif kind == "max_ratio" and rv > 0 and nv > rv * bound:
+            problems.append(
+                f"{bench}.{path}: {nv:.4g} exceeds reference "
+                f"{rv:.4g} x{bound} (regression)")
+        elif kind == "min_ratio" and nv < rv * bound:
+            problems.append(
+                f"{bench}.{path}: {nv:.4g} below reference "
+                f"{rv:.4g} x{bound} (regression)")
+        elif kind == "min_frac" and nv < rv * bound:
+            problems.append(
+                f"{bench}.{path}: {nv:.4g} below reference "
+                f"{rv:.4g} x{bound}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--ref-dir", default=REF_DIR)
+    args = ap.parse_args()
+    failures = []
+    for art in args.artifacts:
+        ref = os.path.join(args.ref_dir, os.path.basename(art))
+        if not os.path.exists(ref):
+            failures.append(f"{art}: no reference at {ref} "
+                            f"(commit one to start the trajectory)")
+            continue
+        probs = check(art, ref)
+        tag = "OK" if not probs else "REGRESSION"
+        print(f"[{tag}] {os.path.basename(art)} vs {ref}")
+        for p in probs:
+            print(f"    {p}")
+        failures.extend(probs)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

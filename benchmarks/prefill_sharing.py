@@ -13,6 +13,9 @@ generated tokens (greedy), which must be identical across modes.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import random
 import time
 
@@ -77,6 +80,10 @@ def run(verbose: bool = False):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_prefill_sharing.json"))
+    args, _ = ap.parse_known_args()
     rows = run(verbose=True)
     shared = next(r for r in rows if r["mode"] == "shared")
     private = next(r for r in rows if r["mode"] == "per-trace")
@@ -93,6 +100,22 @@ def main():
           f"(identical greedy outputs); {saved} fewer peak blocks")
     assert speedup >= MIN_SPEEDUP, \
         f"expected >= {MIN_SPEEDUP}x prefill reduction, got {speedup:.1f}x"
+
+    out = os.path.abspath(args.out)
+    payload = {
+        "benchmark": "prefill_sharing",
+        "config": {"n_traces": N_TRACES, "max_new_tokens": MAX_NEW,
+                   "num_blocks": NUM_BLOCKS, "capacity": CAPACITY},
+        "prefill_speedup_x": speedup,
+        "peak_blocks_saved": saved,
+        "shared": {k: shared[k] for k in
+                   ("prefill_s", "wall_s", "peak_blocks")},
+        "per_trace": {k: private[k] for k in
+                      ("prefill_s", "wall_s", "peak_blocks")},
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out}")
     return rows
 
 

@@ -1,0 +1,131 @@
+"""Online-serving load benchmark: Poisson arrivals through the
+continuous-batching scheduler.
+
+Replays a seeded Poisson arrival trace against one engine (chunked
+prefill + per-tick token budget on), records per-request TTFT / TPOT /
+end-to-end latency, and writes the percentile summary to
+``BENCH_serving.json`` — the artifact the CI benchmark-smoke job uploads
+and regression-checks, starting the repo's perf trajectory.
+
+Uses randomly-initialised weights (perf numbers don't need a trained
+model) so it runs in seconds on the CI CPU runners:
+
+    PYTHONPATH=src python -m benchmarks.serving_load [--out path.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs.registry import serving_config
+from repro.core.pruning import make_policy
+from repro.core.trace import TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.data.arithmetic import make_prompt
+from repro.models.init import init_params
+from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
+                           make_problems, poisson_arrivals, summarize)
+
+N_REQUESTS = 6
+N_TRACES = 4
+MAX_NEW = 24
+NUM_BLOCKS = 96
+CAPACITY = 128
+ARRIVAL_RATE = 4.0      # requests / second (open-loop Poisson)
+PREFILL_CHUNK = 16
+MAX_TOKENS_PER_STEP = 64
+SEED = 1234
+
+
+def build_requests(tok):
+    problems = make_problems(N_REQUESTS, seed=SEED, n_steps=(8, 12))
+    arrivals = poisson_arrivals(N_REQUESTS, ARRIVAL_RATE, seed=SEED)
+    return [
+        Request(request_id=i,
+                prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
+                n_traces=N_TRACES, policy=make_policy("sc"),
+                arrival_time=at)
+        for i, (p, at) in enumerate(zip(problems, arrivals))
+    ]
+
+
+def run(verbose: bool = False) -> dict:
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+    ecfg = EngineConfig(
+        max_batch=N_REQUESTS * N_TRACES, num_blocks=NUM_BLOCKS,
+        capacity=CAPACITY, max_new_tokens=MAX_NEW,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=MAX_NEW),
+        prefill_chunk_size=PREFILL_CHUNK,
+        max_tokens_per_step=MAX_TOKENS_PER_STEP)
+    engine = Engine(params, cfg, ecfg, make_policy("sc"))
+
+    # warm the jit caches (prefill, chunk prefill, decode) so the timed
+    # replay measures scheduling, not compilation
+    warm = build_requests(tok)[0]
+    warm.arrival_time = 0.0
+    engine.serve_batch([warm])
+
+    requests = build_requests(tok)
+    t0 = time.perf_counter()
+    completions = []
+    results = engine.serve_batch(
+        requests, on_complete=lambda r: completions.append(r.request_id))
+    wall = time.perf_counter() - t0
+
+    assert len(completions) == len(requests), "streaming callback missed"
+    for r in results:
+        assert all(t.status == TraceStatus.FINISHED for t in r.traces)
+        assert r.metrics is not None and r.metrics.ttft_s is not None
+        assert r.metrics.first_token_s >= r.metrics.arrival_s
+    assert engine.block_mgr.free_blocks == engine.block_mgr.num_blocks - 1
+    engine.block_mgr.check_invariants()
+
+    summary = summarize([r.metrics for r in results])
+    payload = {
+        "benchmark": "serving_load",
+        "config": {
+            "n_requests": N_REQUESTS, "n_traces": N_TRACES,
+            "max_new_tokens": MAX_NEW, "num_blocks": NUM_BLOCKS,
+            "capacity": CAPACITY, "arrival_rate_per_s": ARRIVAL_RATE,
+            "prefill_chunk_size": PREFILL_CHUNK,
+            "max_tokens_per_step": MAX_TOKENS_PER_STEP, "seed": SEED,
+        },
+        "wall_s": wall,
+        **summary,
+    }
+    if verbose:
+        print(f"serving_load: {summary['num_completed']}/{N_REQUESTS} "
+              f"requests, {summary['total_output_tokens']} tokens "
+              f"in {wall:.2f}s "
+              f"({summary['throughput_tok_per_s']:.1f} tok/s)")
+        print(f"  ttft  p50={summary['ttft_s']['p50']:.3f}s "
+              f"p99={summary['ttft_s']['p99']:.3f}s")
+        print(f"  tpot  p50={summary['tpot_s']['p50'] * 1e3:.1f}ms "
+              f"p99={summary['tpot_s']['p99'] * 1e3:.1f}ms")
+        print(f"  e2e   p50={summary['e2e_s']['p50']:.3f}s "
+              f"p99={summary['e2e_s']['p99']:.3f}s")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    args = ap.parse_args()
+    payload = run(verbose=True)
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,21 @@
 """Pruning policies: STEP (ours) + the paper's baselines (§5.1).
 
-The engine consults the active policy at two points each scheduler step:
+The engine consults the active policy at three points each scheduler
+step:
 
+  * ``observe_pressure(pressure)``     — once per scheduler tick, the
+    engine publishes the current admission pressure (queued requests,
+    runnable-but-unadmitted traces, pool occupancy). Policies may use it
+    to modulate pruning; the base implementation just records it.
   * ``traces_to_terminate(running)``   — signal-triggered early stopping
-    (DeepConf confidence threshold, Slim-SC similarity pruning);
-  * ``on_memory_full(running)``        — invoked when the paged KV pool
-    cannot schedule the next decode step. STEP returns the lowest-scored
-    trace to prune (freeing its blocks immediately — the waiting queue
-    never forms); baselines return None, which makes the engine PREEMPT
-    a trace vLLM-style (free blocks, re-enqueue, recompute later).
+    (DeepConf confidence threshold, Slim-SC similarity pruning, STEP's
+    optional proactive pruning under admission pressure);
+  * ``on_memory_full(running, pressure=...)`` — invoked when the paged
+    KV pool cannot schedule the next decode step. STEP returns the
+    lowest-scored trace to prune (freeing its blocks immediately — the
+    waiting queue never forms); baselines return None, which makes the
+    engine PREEMPT a trace vLLM-style (free blocks, re-enqueue,
+    recompute later).
 """
 from __future__ import annotations
 
@@ -22,16 +29,50 @@ from repro.core.trace import Trace
 from repro.core.voting import majority_vote, weighted_vote
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionPressure:
+    """What the scheduler can tell a policy about contention right now.
+
+    Published once per tick (continuous batching: arrivals land while
+    earlier requests still decode, so pruning decisions can react to how
+    much work is knocking on the door, not just to the instant the pool
+    runs dry — the online regime ReProbe / Tracing-the-Traces evaluate).
+    """
+
+    waiting_traces: int = 0     # runnable traces with no decode slot/blocks
+    queued_requests: int = 0    # arrived requests not yet started
+    free_blocks: int = 0
+    total_blocks: int = 0
+
+    @property
+    def memory_utilization(self) -> float:
+        if self.total_blocks <= 0:
+            return 0.0
+        return 1.0 - self.free_blocks / self.total_blocks
+
+    @property
+    def demand(self) -> int:
+        """Units of work contending for admission."""
+        return self.waiting_traces + self.queued_requests
+
+
 class PruningPolicy:
     """Base: self-consistency behaviour (no pruning, preemption on OOM)."""
 
     name = "sc"
     uses_scorer = False
+    last_pressure: Optional[AdmissionPressure] = None
+
+    def observe_pressure(self, pressure: AdmissionPressure) -> None:
+        """Scheduler-tick hook: record the current admission pressure."""
+        self.last_pressure = pressure
 
     def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
         return []
 
-    def on_memory_full(self, running: Sequence[Trace]) -> Optional[Trace]:
+    def on_memory_full(self, running: Sequence[Trace],
+                       pressure: Optional[AdmissionPressure] = None
+                       ) -> Optional[Trace]:
         return None  # => engine preempts (waiting queue forms)
 
     def vote(self, traces: Sequence[Trace]) -> Optional[str]:
@@ -47,14 +88,43 @@ class SingleTrace(PruningPolicy):
     name = "cot"
 
 
+@dataclasses.dataclass
 class StepPolicy(PruningPolicy):
     """STEP (ours): hidden-state step scores + memory-aware pruning +
-    score-weighted voting."""
+    score-weighted voting.
+
+    ``proactive_free_blocks`` (default 0 = off, the paper's setting):
+    under continuous batching, prune the lowest-scored running trace
+    *before* the pool actually runs dry — whenever admission pressure
+    exists (waiting traces or queued requests) and the free pool has
+    fallen below the margin. This trades a little trace budget for TTFT
+    of queued arrivals; keep it 0 to reproduce the paper's reactive
+    behaviour exactly. A trace is only judged proactively once it shows
+    a step score or has decoded ``proactive_min_tokens`` tokens.
+    """
+
+    proactive_free_blocks: int = 0
+    proactive_min_tokens: int = 16
 
     name = "step"
     uses_scorer = True
 
-    def on_memory_full(self, running: Sequence[Trace]) -> Optional[Trace]:
+    def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
+        p = self.last_pressure
+        if (self.proactive_free_blocks <= 0 or p is None
+                or p.demand == 0
+                or p.free_blocks >= self.proactive_free_blocks):
+            return []
+        cands = [t for t in running if t.alive
+                 and (t.step_scores
+                      or t.num_tokens >= self.proactive_min_tokens)]
+        if len(cands) <= 1:
+            return []
+        return [min(cands, key=lambda t: t.score)]
+
+    def on_memory_full(self, running: Sequence[Trace],
+                       pressure: Optional[AdmissionPressure] = None
+                       ) -> Optional[Trace]:
         candidates = [t for t in running if t.alive]
         if not candidates:
             return None

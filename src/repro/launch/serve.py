@@ -3,13 +3,20 @@ synthetic reasoning requests with the trained artifacts.
 
     PYTHONPATH=src python -m repro.launch.serve --method step \
         --problems 8 --traces 16 [--blocks 64]
+
+Online serving (continuous batching): replay a Poisson arrival trace,
+stream per-request completions, and print the TTFT/TPOT/e2e summary:
+
+    python -m repro.launch.serve --method step --batched \
+        --arrival-rate 2.0 --chunk 32 --max-tokens-per-step 64 --stream
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.serving import (EngineConfig, SamplingParams, evaluate_method,
-                           evaluate_method_batched, make_problems)
+                           evaluate_method_batched, make_problems,
+                           poisson_arrivals)
 
 
 def main():
@@ -27,6 +34,17 @@ def main():
     ap.add_argument("--batched", action="store_true",
                     help="submit all problems to ONE engine as a "
                          "request queue (cross-request contention)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = everything "
+                         "at t=0 (offline batch). Implies --batched.")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="prefill chunk size in tokens (0 = one-shot "
+                         "prefill)")
+    ap.add_argument("--max-tokens-per-step", type=int, default=0,
+                    help="per-tick token budget shared by decode and "
+                         "prefill (0 = unlimited)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each request's result as it completes")
     args = ap.parse_args()
 
     from benchmarks.common import load_artifacts
@@ -35,19 +53,49 @@ def main():
     ecfg = EngineConfig(
         max_batch=args.traces, num_blocks=args.blocks, capacity=256,
         max_new_tokens=args.max_new,
-        sampling=SamplingParams(max_new_tokens=args.max_new))
+        sampling=SamplingParams(max_new_tokens=args.max_new),
+        prefill_chunk_size=args.chunk or None,
+        max_tokens_per_step=args.max_tokens_per_step or None)
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \
         if args.method == "deepconf" else {}
-    eval_fn = evaluate_method_batched if args.batched else evaluate_method
-    res = eval_fn(args.method, params, cfg, problems, args.traces,
-                  ecfg, scorer_params=scorer, policy_kwargs=pkw,
-                  verbose=True)
+
+    batched = args.batched or args.arrival_rate > 0
+    if batched:
+        arrivals = poisson_arrivals(len(problems), args.arrival_rate,
+                                    seed=args.seed)
+
+        def on_result(r):
+            if not args.stream:
+                return
+            m = r.metrics
+            print(f"  << q{r.request_id} done: ans={r.answer} "
+                  f"ttft={m.ttft_s:.2f}s tpot={m.tpot_s * 1e3:.0f}ms "
+                  f"e2e={m.e2e_s:.2f}s tok={r.total_tokens}")
+
+        res = evaluate_method_batched(
+            args.method, params, cfg, problems, args.traces, ecfg,
+            scorer_params=scorer, policy_kwargs=pkw,
+            arrival_times=arrivals, on_result=on_result,
+            verbose=not args.stream)
+    else:
+        res = evaluate_method(args.method, params, cfg, problems,
+                              args.traces, ecfg, scorer_params=scorer,
+                              policy_kwargs=pkw, verbose=True)
+
     print(f"\n[{args.method}] acc={res.accuracy:.2f} "
           f"tokens={res.avg_tokens:.0f} latency={res.avg_latency_s:.2f}s "
           f"wait={res.total_wait_s:.2f}s pruned={res.num_pruned} "
           f"preempt={res.num_preemptions}")
+    if res.serving is not None:
+        s = res.serving
+        print(f"[serving] ttft p50={s['ttft_s']['p50']:.2f}s "
+              f"p99={s['ttft_s']['p99']:.2f}s | "
+              f"tpot p50={s['tpot_s']['p50'] * 1e3:.0f}ms | "
+              f"e2e p50={s['e2e_s']['p50']:.2f}s "
+              f"p99={s['e2e_s']['p99']:.2f}s | "
+              f"throughput={s['throughput_tok_per_s']:.1f} tok/s")
 
 
 if __name__ == "__main__":

@@ -272,6 +272,87 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     return out, (pool_k, pool_v)
 
 
+def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
+                                positions: jax.Array, valid: jax.Array,
+                                k_pool: jax.Array, v_pool: jax.Array,
+                                block_tables: jax.Array, window_len: int,
+                                window: Optional[int] = None) -> tuple:
+    """Prefill one chunk of a prompt against the paged KV cache.
+
+    The continuous-batching engine splits long prompts into fixed-size
+    chunks so prefill interleaves with decode steps instead of stalling
+    the running batch. Earlier chunks' KV already sits in the paged pool
+    (written by previous calls); this layer writes the chunk's own KV
+    into the pool, then attends the chunk's queries over the pooled
+    prefix *plus* the exact (un-roundtripped) chunk KV.
+
+    x [B, C, D]; positions [B, C] absolute prompt positions; valid
+    [B, C] marks real tokens (the final chunk is right-padded to the
+    static chunk width — padded slots write to the scratch block and
+    their outputs are discarded by the caller). Assumes prompt_len <=
+    window_len so slot == position (no wraparound during prefill; the
+    engine gates chunked prefill on this).
+    Returns (out [B, C, D], new_k_pool, new_v_pool).
+    """
+    B, C, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    bs = k_pool.shape[1]
+    bp = block_tables.shape[1]
+    q = (x @ p["wq"]).reshape(B, C, H, hd)
+    k = (x @ p["wk"]).reshape(B, C, KVH, hd)
+    v = (x @ p["wv"]).reshape(B, C, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)  # [B,C,hd/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # scatter the chunk's KV into the pool (padded slots -> scratch 0)
+    slot = positions % window_len                      # [B, C] == positions
+    block_ids = jnp.take_along_axis(block_tables, slot // bs, axis=1)
+    block_ids = jnp.where(valid, block_ids, 0)
+    offs = slot % bs
+    new_k_pool = k_pool.at[block_ids, offs].set(k)
+    new_v_pool = v_pool.at[block_ids, offs].set(v)
+
+    # keys/values = [pooled prefix (earlier chunks) ++ exact own chunk].
+    # The pool side is masked to positions strictly before this chunk, so
+    # within-chunk attention never round-trips through the (bf16) pool —
+    # only the cross-chunk prefix does, exactly as decode reads it later.
+    kc = new_k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    vc = new_v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    keys = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+    vals = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+
+    q_pos = positions[:, :, None]                        # [B, C, 1]
+    chunk_start = positions[:, :1, None]                 # [B, 1, 1]
+    pool_pos = jnp.arange(bp * bs)[None, None, :]        # pool slot == pos
+    pool_mask = pool_pos < chunk_start                   # earlier chunks only
+    own_pos = positions[:, None, :]                      # [B, 1, C]
+    own_mask = (own_pos <= q_pos) & valid[:, None, :]    # causal + no pad
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(pool_mask, (B, C, bp * bs)),
+         jnp.broadcast_to(own_mask, (B, C, C))], axis=2)
+    if window is not None:
+        all_pos = jnp.concatenate(
+            [jnp.broadcast_to(pool_pos, (B, 1, bp * bs)),
+             jnp.broadcast_to(own_pos, (B, 1, C))], axis=2)
+        mask &= all_pos > (q_pos - window)
+
+    group = H // KVH
+    qg = q.reshape(B, C, KVH, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, keys,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vals)
+    out = out.reshape(B, C, H * hd) @ p["wo"]
+    return out, new_k_pool, new_v_pool
+
+
 # ---------------------------------------------------------------------------
 # contiguous-cache decode attention — the DISTRIBUTED serving layout
 # ---------------------------------------------------------------------------

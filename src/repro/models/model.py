@@ -342,6 +342,57 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill against the paged cache (continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill is implemented for the paged-attention dense/MoE
+    stack. Recurrent (SSM/hybrid) archs would need the mixer to accept an
+    initial state per chunk, MLA a latent-pool chunk path, and enc-dec the
+    cross cache — those fall back to one-shot prefill in the engine."""
+    return (cfg.arch_type not in ("ssm", "hybrid")
+            and not cfg.use_mla and not cfg.is_encoder_decoder)
+
+
+def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                       positions: jax.Array, valid: jax.Array, cache: dict,
+                       window_len: int) -> dict:
+    """Prefill one prompt chunk into the paged KV cache.
+
+    tokens [B, C] (right-padded to the static chunk width); positions
+    [B, C] absolute prompt positions; valid [B, C] marks real tokens.
+    Earlier chunks' KV must already be in the pool (previous calls).
+    Returns {logits [B, C, V], cache} — the caller samples from the
+    logits at the prompt's last valid position of the final chunk.
+    """
+    assert supports_chunked_prefill(cfg), cfg.arch_type
+    h = _embed(params, cfg, tokens)  # [B, C, D]
+    new_cache = dict(cache)
+    window = cfg.sliding_window
+
+    def body(h, xs):
+        lp, k_pool, v_pool = xs
+        a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, nk, nv = L.gqa_attention_prefill_chunk(
+            lp["attn"], cfg, a_in, positions, valid, k_pool, v_pool,
+            cache["block_tables"], window_len, window=window)
+        h = h + a
+        m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.uses_moe:
+            m, _ = L.moe_layer(lp["moe"], cfg, m_in)
+        else:
+            m = L.swiglu(lp["mlp"], m_in)
+        return h + m, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["layers"], cache["k_pool"], cache["v_pool"]))
+    new_cache["k_pool"], new_cache["v_pool"] = nk, nv
+    hidden = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, hidden)
+    return {"logits": logits, "hidden": hidden, "cache": new_cache}
+
+
+# ---------------------------------------------------------------------------
 # distributed serve step — contiguous per-sequence caches (see layers.py:
 # "contiguous-cache decode attention"); this is the step the multi-pod
 # dry-run lowers for the decode shapes.

@@ -1,12 +1,17 @@
 from repro.serving.engine import Engine, EngineConfig, Request, RequestResult
 from repro.serving.evaluate import (EvalResult, evaluate_method,
-                                    evaluate_method_batched, make_problems)
-from repro.serving.kv_manager import BlockManager
+                                    evaluate_method_batched, make_problems,
+                                    poisson_arrivals)
+from repro.serving.kv_manager import BlockManager, Reservation
+from repro.serving.metrics import RequestMetrics, percentiles, summarize
+from repro.serving.queue import RequestQueue
 from repro.serving.sampling import SamplingParams, sample_tokens
 
 __all__ = [
     "Engine", "EngineConfig", "Request", "RequestResult",
     "EvalResult", "evaluate_method", "evaluate_method_batched",
-    "make_problems",
-    "BlockManager", "SamplingParams", "sample_tokens",
+    "make_problems", "poisson_arrivals",
+    "BlockManager", "Reservation", "RequestQueue",
+    "RequestMetrics", "percentiles", "summarize",
+    "SamplingParams", "sample_tokens",
 ]

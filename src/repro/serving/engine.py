@@ -15,6 +15,28 @@ Scheduling semantics (paper §3, §4.2):
   * STEP: the policy returns the lowest-scored trace; the engine PRUNES it
     and immediately reuses its blocks. The waiting queue never forms.
 
+Continuous batching (online arrivals): ``serve_batch`` runs a scheduler
+tick loop over a ``RequestQueue`` with per-request arrival times.
+Requests join the waiting pool only once their arrival time passes, so
+decode keeps running between admission waves and per-request
+time-to-first-token / time-per-output-token are measured against the
+arrival instant (``serving/metrics.py``). With every arrival at t=0 the
+tick loop degenerates to the offline batch scheduler and reproduces its
+outputs token-for-token under greedy sampling.
+
+Chunked prefill (``EngineConfig.prefill_chunk_size``): long prompts are
+prefilled in fixed-size chunks against the paged pool
+(``prefill_chunk_step``), drawing KV blocks chunk-by-chunk through a
+``BlockManager.reserve`` reservation. While traces are decoding, each
+in-flight prefill advances at most one chunk per scheduler tick, so a
+long prompt no longer stalls the running decode batch; with an idle
+batch the prefill runs to completion immediately. A tick's combined
+prefill work is budgeted by ``EngineConfig.max_tokens_per_step``
+(prefill chunks and decode tokens share the tick's token budget).
+Chunking applies to the shared-prefix path of paged-attention archs;
+recurrent/MLA/enc-dec archs and per-trace prefills fall back to the
+one-shot path.
+
 Prefix sharing (``EngineConfig.share_prompt_prefix``, default on): all N
 traces of a request decode from the *same* prompt, so the prompt KV is
 computed once per request, written into shared paged blocks, and forked
@@ -25,13 +47,14 @@ the flag off the engine reproduces the original per-trace prefill path
 (N sequential prompt prefills), which is the accounting baseline for
 Table 3.
 
-Multi-request scheduling: ``serve_batch`` admits traces from a queue of
-requests into one shared decode batch; traces from different requests
-co-exist in the fixed-shape decode step, contend for the same block pool,
-and are aggregated into per-request ``RequestResult``s. Policies act per
+Multi-request scheduling: traces from different requests co-exist in the
+fixed-shape decode step, contend for the same block pool, and are
+aggregated into per-request ``RequestResult``s. Policies act per
 request: the needy trace's own request's policy decides what to prune;
 baseline preemption (last-arrived running trace) is global, like vLLM's
-latest-arrival eviction.
+latest-arrival eviction. Each tick the engine publishes an
+``AdmissionPressure`` snapshot to every active policy, so pruning
+decisions can react to queued arrivals (``PruningPolicy.observe_pressure``).
 
 Latency accounting mirrors the paper's Table 3: every wall-clock second of
 the engine loop is attributed to {prefill, decode, overhead}; every second
@@ -47,21 +70,24 @@ import copy
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pruning import DeepConfPolicy, PruningPolicy
+from repro.core.pruning import AdmissionPressure, DeepConfPolicy, PruningPolicy
 from repro.data.arithmetic import extract_answer
 from repro.core.scorer import scorer_score
 from repro.core.trace import Trace, TraceStatus
 from repro.data.tokenizer import get_tokenizer
 from repro.models.model import (copy_kv_block, decode_step, forward_full,
-                                init_decode_cache, write_prefill_kv)
-from repro.serving.kv_manager import BlockManager
+                                init_decode_cache, prefill_chunk_step,
+                                supports_chunked_prefill, write_prefill_kv)
+from repro.serving.kv_manager import BlockManager, Reservation
+from repro.serving.metrics import RequestMetrics
+from repro.serving.queue import RequestQueue
 from repro.serving.sampling import SamplingParams, sample_tokens
 
 
@@ -79,11 +105,24 @@ class EngineConfig:
     # trace (COW on first trace-private write). False restores the
     # original per-trace prefill path (the Table-3 accounting baseline).
     share_prompt_prefix: bool = True
+    # Chunked prefill: split shared-prefix prompt prefills into chunks of
+    # this many tokens, interleaved with decode ticks. None = one-shot
+    # prefill (the offline-equivalent setting).
+    prefill_chunk_size: Optional[int] = None
+    # Per-tick token budget shared by decode tokens (one per running
+    # trace) and prefill tokens (chunks + one-shot prefills). None =
+    # unlimited (admission bounded only by slots and blocks).
+    max_tokens_per_step: Optional[int] = None
 
 
 @dataclasses.dataclass
 class Request:
     """One unit of work for the scheduler: a prompt and a trace budget.
+
+    ``arrival_time`` is in seconds relative to the start of the serve
+    loop; the scheduler will not admit the request before it. 0.0 (the
+    default) means available immediately, which reproduces the offline
+    batch semantics.
 
     ``policy`` overrides the engine-level policy for this request; pass a
     fresh instance per request when the policy is stateful (DeepConf's
@@ -95,6 +134,7 @@ class Request:
     prompt_tokens: List[int]
     n_traces: int
     policy: Optional[PruningPolicy] = None
+    arrival_time: float = 0.0
 
 
 @dataclasses.dataclass
@@ -109,7 +149,10 @@ class RequestResult:
     prefill_s: float
     num_pruned: int
     num_preemptions: int
-    peak_blocks_used: int = 0  # pool-wide peak during this request's batch
+    # pool-wide peak block usage observed up to this request's completion
+    # (stable by the time the streaming on_complete callback sees it)
+    peak_blocks_used: int = 0
+    metrics: Optional[RequestMetrics] = None
 
 
 @dataclasses.dataclass
@@ -134,10 +177,19 @@ class _ReqState:
         self.decode_s = 0.0
         self.t_done: Optional[float] = None
         self.warmup_recorded = not isinstance(policy, DeepConfPolicy)
+        # online-serving timestamps (absolute perf_counter seconds)
+        self.arrived = False
+        self.admit_t: Optional[float] = None
+        self.first_token_t: Optional[float] = None
+        self.result: Optional[RequestResult] = None
 
     @property
     def request_id(self) -> int:
         return self.req.request_id
+
+    def note_first_token(self) -> None:
+        if self.first_token_t is None:
+            self.first_token_t = time.perf_counter()
 
     def admissible(self, trace: Trace) -> bool:
         """DeepConf online: traces beyond the warmup set wait until the
@@ -159,10 +211,67 @@ class _ReqState:
         return all(not t.alive for t in self.traces)
 
 
+class _PrefillJob:
+    """An in-flight chunked prompt prefill (shared-prefix path).
+
+    Holds a chunk-granular block reservation: blocks already taken carry
+    completed chunks' KV; the job draws more as chunks land and commits
+    the full set into the request's ``_SharedPrefix`` when the prompt is
+    exhausted. ``abort`` (memory pressure) returns every block; the
+    prefill restarts from scratch on the next admission attempt.
+    """
+
+    def __init__(self, st: _ReqState, reservation: Reservation,
+                 blocks_per_seq: int):
+        self.st = st
+        self.tokens: List[int] = list(st.req.prompt_tokens)
+        self.pos = 0
+        self.res = reservation
+        self.row = np.zeros((blocks_per_seq,), np.int32)
+        self.last_logits = None
+
+    @property
+    def request_id(self) -> int:
+        return self.st.request_id
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.tokens)
+
+    def abort(self) -> None:
+        self.res.abort()
+
+
+class _TokenBudget:
+    """Per-tick token budget (``EngineConfig.max_tokens_per_step``).
+
+    Decode consumes one token per running trace before prefill work is
+    scheduled; ``spend`` charges prefill tokens when they are computed.
+    ``force`` lets ``can`` approve the tick's first prefill even beyond
+    the limit when nothing is decoding — otherwise a prompt longer than
+    the budget could never start.
+    """
+
+    def __init__(self, limit: Optional[int]):
+        self.left = limit  # None = unlimited
+        self.spent_any = False
+
+    def can(self, n_tokens: int, force: bool = False) -> bool:
+        if self.left is None or self.left >= n_tokens:
+            return True
+        return force and not self.spent_any
+
+    def spend(self, n_tokens: int) -> None:
+        self.spent_any = True
+        if self.left is not None:
+            self.left = max(self.left - n_tokens, 0)
+
+
 class Engine:
     """Continuous-batching engine over a queue of requests, each fanning
     out into N parallel traces (the paper's setting: one problem, N=64
-    traces — ``serve``; cross-request contention — ``serve_batch``)."""
+    traces — ``serve``; cross-request contention and online arrivals —
+    ``serve_batch``)."""
 
     def __init__(self, params: dict, cfg: ModelConfig, ecfg: EngineConfig,
                  policy: PruningPolicy,
@@ -177,6 +286,7 @@ class Engine:
         self.blocks_per_seq = -(-ecfg.capacity // bs)
         self.block_mgr = BlockManager(ecfg.num_blocks, bs)
         self._rng = jax.random.PRNGKey(ecfg.seed)
+        self._chunk_supported = supports_chunked_prefill(cfg)
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -218,6 +328,22 @@ class Engine:
             return logits, out["kvs"]
 
         self._prefill = prefill
+
+        if self._chunk_supported:
+            @partial(jax.jit, donate_argnums=(1,))
+            def chunk_prefill(params, cache, tokens, positions, valid,
+                              block_tables):
+                cache = dict(cache)
+                cache["block_tables"] = block_tables
+                out = prefill_chunk_step(params, cfg, tokens, positions,
+                                         valid, cache,
+                                         window_len=ecfg.capacity)
+                logits = out["logits"].at[..., V:].set(-jnp.inf)
+                new_cache = out["cache"]
+                new_cache.pop("block_tables", None)
+                return logits, new_cache
+
+            self._chunk_prefill = chunk_prefill
 
         # COW block copy: pool[:, dst] = pool[:, src], one jitted instance
         # for all block pairs (src/dst are traced scalars).
@@ -312,12 +438,20 @@ class Engine:
                       n_traces=n_traces, policy=self.policy)
         return self.serve_batch([req])[0]
 
-    def serve_batch(self, requests: Sequence[Request]) -> List[RequestResult]:
+    def serve_batch(self, requests: Sequence[Request],
+                    on_complete: Optional[Callable[[RequestResult], None]]
+                    = None) -> List[RequestResult]:
         """Serve a queue of requests through one shared decode batch.
 
-        Total traces may exceed ``max_batch``: surplus traces wait for a
-        free decode slot. Block-pool contention is cross-request; each
+        Requests join the scheduler at their ``arrival_time``; total
+        traces may exceed ``max_batch`` (surplus traces wait for a free
+        decode slot). Block-pool contention is cross-request; each
         request's own policy governs pruning of its traces.
+
+        ``on_complete`` streams results: it is invoked with a request's
+        ``RequestResult`` the moment its last trace finishes, while other
+        requests are still decoding. The returned list is in submission
+        order, as before.
         """
         t_start = time.perf_counter()
         states: List[_ReqState] = []
@@ -338,42 +472,72 @@ class Engine:
                       for i in range(req.n_traces)]
             states.append(_ReqState(req, policy, traces))
 
-        peak_blocks = self._run_scheduler(states)
+        peak_blocks = self._run_scheduler(states, t_start, on_complete)
 
         t_end = time.perf_counter()
         results = []
         for st in states:
-            finished = [t for t in st.traces
-                        if t.status == TraceStatus.FINISHED]
-            answer = st.policy.vote(finished) if finished else None
-            done = st.t_done if st.t_done is not None else t_end
-            results.append(RequestResult(
-                request_id=st.request_id, answer=answer, traces=st.traces,
-                latency_s=done - t_start,
-                total_tokens=sum(t.num_tokens for t in st.traces),
-                wait_s=sum(t.wait_time for t in st.traces),
-                decode_s=st.decode_s, prefill_s=st.prefill_s,
-                num_pruned=sum(t.status == TraceStatus.PRUNED
-                               for t in st.traces),
-                num_preemptions=sum(max(t.prefill_count - 1, 0)
-                                    for t in st.traces),
-                peak_blocks_used=peak_blocks,
-            ))
+            if st.result is None:  # defensive: finalize stragglers
+                st.result = self._finalize(st, t_start, t_end, peak_blocks)
+            results.append(st.result)
         return results
 
+    def _finalize(self, st: _ReqState, t_start: float, t_end: float,
+                  peak_blocks: int) -> RequestResult:
+        """Fold one finished request's traces into its RequestResult."""
+        finished = [t for t in st.traces if t.status == TraceStatus.FINISHED]
+        answer = st.policy.vote(finished) if finished else None
+        done = st.t_done if st.t_done is not None else t_end
+        total_tokens = sum(t.num_tokens for t in st.traces)
+        num_pruned = sum(t.status == TraceStatus.PRUNED for t in st.traces)
+        num_preempt = sum(max(t.prefill_count - 1, 0) for t in st.traces)
+        wait_s = sum(t.wait_time for t in st.traces)
+        metrics = RequestMetrics(
+            request_id=st.request_id,
+            arrival_s=st.req.arrival_time,
+            admitted_s=(st.admit_t - t_start
+                        if st.admit_t is not None else None),
+            first_token_s=(st.first_token_t - t_start
+                           if st.first_token_t is not None else None),
+            finished_s=done - t_start,
+            prompt_tokens=len(st.req.prompt_tokens),
+            output_tokens=total_tokens,
+            n_traces=len(st.traces),
+            num_pruned=num_pruned,
+            num_preemptions=num_preempt,
+            wait_s=wait_s, prefill_s=st.prefill_s, decode_s=st.decode_s)
+        return RequestResult(
+            request_id=st.request_id, answer=answer, traces=st.traces,
+            latency_s=done - t_start,
+            total_tokens=total_tokens,
+            wait_s=wait_s,
+            decode_s=st.decode_s, prefill_s=st.prefill_s,
+            num_pruned=num_pruned,
+            num_preemptions=num_preempt,
+            peak_blocks_used=peak_blocks,
+            metrics=metrics)
+
     # ------------------------------------------------------------------
-    def _run_scheduler(self, states: List[_ReqState]) -> int:
-        """Run every request's traces to completion/pruning. Returns the
-        pool-wide peak block usage."""
+    def _run_scheduler(self, states: List[_ReqState], t_start: float,
+                       on_complete: Optional[Callable[[RequestResult], None]]
+                       = None) -> int:
+        """Tick loop: arrivals -> admission/chunked prefill -> COW/frontier
+        block assurance -> batched decode -> prune/preempt. Runs every
+        request's traces to completion/pruning. Returns the pool-wide
+        peak block usage."""
         ecfg, cfg, tok = self.ecfg, self.cfg, self.tok
         B = ecfg.max_batch
         bs = cfg.kv_block_size
         cap = ecfg.capacity
         share = ecfg.share_prompt_prefix
+        chunk = ecfg.prefill_chunk_size if self._chunk_supported else None
         mgr = self.block_mgr
         cache = self._init_cache()
         by_req: Dict[int, _ReqState] = {st.request_id: st for st in states}
         assert len(by_req) == len(states), "duplicate request_id in batch"
+
+        pending = RequestQueue([st.req for st in states])
+        started: List[_ReqState] = []
 
         block_tables = np.zeros((B, self.blocks_per_seq), np.int32)
         positions = np.zeros((B,), np.int32)
@@ -381,20 +545,27 @@ class Engine:
         free_slots = list(range(B))
         running: List[Trace] = []
         waiting: List[Trace] = []
-        for st in states:
-            for t in st.traces:
-                t.status = TraceStatus.WAITING
-                # wait_time counts only MEMORY-induced waiting (paper
-                # Table 3): the clock starts at preemption or at a
-                # memory-blocked admission attempt, not at submission.
-                t.runnable_since = -1.0
-            waiting.extend(st.traces)
+        jobs: Dict[int, _PrefillJob] = {}  # request_id -> in-flight prefill
 
         peak_blocks = 0
+        idle_ticks = 0  # consecutive no-progress ticks (deadlock guard)
 
         def note_peak():
             nonlocal peak_blocks
             peak_blocks = max(peak_blocks, mgr.used_blocks)
+
+        def admit_arrivals(now_rel: float):
+            for req in pending.pop_arrived(now_rel):
+                st = by_req[req.request_id]
+                st.arrived = True
+                started.append(st)
+                for t in st.traces:
+                    t.status = TraceStatus.WAITING
+                    # wait_time counts only MEMORY-induced waiting (paper
+                    # Table 3): the clock starts at preemption or at a
+                    # memory-blocked admission attempt, not at arrival.
+                    t.runnable_since = -1.0
+                waiting.extend(st.traces)
 
         def release_prefix(st: _ReqState):
             if st.prefix is not None:
@@ -421,6 +592,11 @@ class Engine:
                 release_prefix(st)
                 if st.t_done is None:
                     st.t_done = time.perf_counter()
+                if st.result is None:
+                    st.result = self._finalize(st, t_start,
+                                               st.t_done, peak_blocks)
+                    if on_complete is not None:
+                        on_complete(st.result)
 
         def reclaim_idle_prefix(skip_rid: int) -> bool:
             """Free shared-prefix blocks of requests with no running
@@ -431,10 +607,29 @@ class Engine:
             before = mgr.free_blocks
             live = {t.request_id for t in running}
             live.add(skip_rid)
-            for st in states:
+            for st in started:
                 if st.prefix is not None and st.request_id not in live:
                     release_prefix(st)
             return mgr.free_blocks > before
+
+        def abort_other_jobs(skip_rid: int) -> bool:
+            """Cancel other requests' in-flight chunked prefills, freeing
+            their partially-reserved blocks (they restart later). Only
+            the decode path calls this — admission-time aborts could
+            livelock two prefilling requests against each other."""
+            freed = False
+            for rid in list(jobs):
+                if rid != skip_rid and jobs[rid].res.num_taken > 0:
+                    jobs.pop(rid).abort()
+                    freed = True
+            return freed
+
+        def current_pressure() -> AdmissionPressure:
+            return AdmissionPressure(
+                waiting_traces=len(waiting),
+                queued_requests=len(pending),
+                free_blocks=mgr.free_blocks,
+                total_blocks=ecfg.num_blocks - 1)
 
         def handle_memory_full(needy: Optional[Trace], rid: int,
                                at_admission: bool = False) -> bool:
@@ -450,7 +645,8 @@ class Engine:
             """
             st = by_req[rid]
             own_running = [t for t in running if t.request_id == rid]
-            victim = st.policy.on_memory_full(own_running)
+            victim = st.policy.on_memory_full(own_running,
+                                              pressure=current_pressure())
             if victim is not None:  # STEP prune
                 if len(own_running) <= 1 and needy is victim:
                     # sole survivor: finish (truncate) instead of self-prune
@@ -462,6 +658,8 @@ class Engine:
                 return True
             if at_admission or not running:
                 return False  # baseline: queue the arrival, keep decoding
+            if abort_other_jobs(skip_rid=rid):
+                return True
             # vLLM preemption: lowest-priority = last-arrived running trace
             victim = running[-1]
             if victim is needy and len(running) == 1:
@@ -480,8 +678,73 @@ class Engine:
             trace.answer = extract_answer(text)
             release(trace, TraceStatus.FINISHED)
 
-        def ensure_prefix(st: _ReqState, trace: Trace) -> Optional[bool]:
-            """Build the request's shared prompt prefill on demand.
+        def start_wait_clock(st: _ReqState):
+            """Memory-blocked before admission: start the WAIT clock of
+            the request's next admissible trace (mirrors the one-shot
+            path, which stamps the admitting trace)."""
+            for t in st.traces:
+                if t.status == TraceStatus.WAITING and t in waiting:
+                    if t.runnable_since < 0:
+                        t.runnable_since = time.perf_counter()
+                    return
+
+        def advance_job(job: _PrefillJob, budget: _TokenBudget) -> str:
+            """Run prefill chunks for one job within the tick budget.
+
+            Returns "ready" (prefix complete), "budget" (tick budget or
+            interleave cap reached), or "memory" (blocked on blocks with
+            no reclaimable progress).
+            """
+            nonlocal cache
+            st = job.st
+            L = len(job.tokens)
+            C = chunk
+            while not job.done:
+                c = min(C, L - job.pos)
+                if not budget.can(c, force=not running):
+                    return "budget"
+                need_total = mgr.blocks_for_tokens(job.pos + c)
+                need_new = need_total - job.res.num_taken
+                while need_new > 0:
+                    got = job.res.take(need_new)
+                    if got is not None:
+                        note_peak()
+                        start = job.res.num_taken - len(got)
+                        job.row[start : job.res.num_taken] = got
+                        break
+                    start_wait_clock(st)
+                    if not handle_memory_full(None, st.request_id,
+                                              at_admission=True):
+                        return "memory"
+                t_pf = time.perf_counter()
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :c] = job.tokens[job.pos : job.pos + c]
+                pos_arr = job.pos + np.arange(C, dtype=np.int32)[None, :]
+                valid = (np.arange(C, dtype=np.int32)[None, :] < c)
+                logits, cache = self._chunk_prefill(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(pos_arr), jnp.asarray(valid),
+                    jnp.asarray(job.row[None, :], jnp.int32))
+                job.last_logits = logits[:, c - 1]
+                job.pos += c
+                budget.spend(c)
+                st.prefill_s += time.perf_counter() - t_pf
+                if running:
+                    # interleave: while traces decode, at most one chunk
+                    # per tick so prefill never stalls the decode batch
+                    break
+            if job.done:
+                st.prefix = _SharedPrefix(
+                    blocks=job.res.commit(), seq_len=L,
+                    last_logits=job.last_logits, slot_state=None)
+                jobs.pop(st.request_id, None)
+                return "ready"
+            return "budget"
+
+        def ensure_prefix(st: _ReqState, trace: Trace,
+                          budget: _TokenBudget) -> Optional[bool]:
+            """Build the request's shared prompt prefill on demand
+            (one-shot path; the chunked path goes through _PrefillJob).
 
             True: prefix ready. False: memory action made progress, retry
             admission. None: memory full and nothing to free — queue.
@@ -502,6 +765,7 @@ class Engine:
                                           at_admission=True):
                     return None
                 return False
+            budget.spend(seq_len)
             blocks = mgr.allocate(need)
             note_peak()
             row = np.zeros((self.blocks_per_seq,), np.int32)
@@ -519,7 +783,7 @@ class Engine:
             return True
 
         def admit_shared(trace: Trace, st: _ReqState,
-                         pending: List[Trace]) -> None:
+                         wave: List[Trace]) -> None:
             """Fork the request's prompt blocks into a fresh trace."""
             nonlocal cache
             prefix = st.prefix
@@ -533,13 +797,15 @@ class Engine:
             trace.status = TraceStatus.RUNNING
             trace.prefill_count += 1
             running.append(trace)
+            if st.admit_t is None:
+                st.admit_t = time.perf_counter()
             row = np.zeros((self.blocks_per_seq,), np.int32)
             row[:len(trace.blocks)] = trace.blocks
             block_tables[slot] = row
             positions[slot] = prefix.seq_len
             if prefix.slot_state is not None:
                 cache = self._write_slot_state(cache, prefix.slot_state, slot)
-            pending.append(trace)
+            wave.append(trace)
 
         def admit_private(trace: Trace, st: _ReqState) -> None:
             """Original per-trace path: full prefill into private blocks
@@ -559,6 +825,8 @@ class Engine:
             trace.status = TraceStatus.RUNNING
             trace.prefill_count += 1
             running.append(trace)
+            if st.admit_t is None:
+                st.admit_t = time.perf_counter()
 
             row = np.zeros((self.blocks_per_seq,), np.int32)
             row[:len(blocks)] = blocks
@@ -577,13 +845,14 @@ class Engine:
             cur_tokens[slot] = int(nt[0])
             trace.output_tokens.append(int(nt[0]))
             trace.token_confidences.append(float(conf[0]))
+            st.note_first_token()
             cache = cache_new
             st.prefill_s += time.perf_counter() - t_pf
 
-        def flush_first_tokens(pending: List[Trace]) -> None:
+        def flush_first_tokens(wave: List[Trace]) -> None:
             """Batch the first-token sampling for every trace admitted via
             prefix forking in this admission wave (one device call)."""
-            live = [t for t in pending if t.status == TraceStatus.RUNNING]
+            live = [t for t in wave if t.status == TraceStatus.RUNNING]
             if not live:
                 return
             logits = jnp.concatenate(
@@ -600,12 +869,28 @@ class Engine:
                 cur_tokens[trace.batch_slot] = int(nt[i])
                 trace.output_tokens.append(int(nt[i]))
                 trace.token_confidences.append(float(conf[i]))
+                by_req[trace.request_id].note_first_token()
 
-        def try_admit() -> None:
-            pending: List[Trace] = []
+        def try_admit(budget: _TokenBudget) -> bool:
+            """One admission wave. Returns True if anything was admitted
+            or any prefill chunk advanced."""
+            wave: List[Trace] = []
+            advanced = False
+            # in-flight chunked prefills advance first (oldest work)
+            for rid in list(jobs):
+                job = jobs.get(rid)
+                if job is None:
+                    continue
+                before = job.pos
+                status = advance_job(job, budget)
+                if status == "ready" or job.pos > before:
+                    advanced = True
+            skipped: set = set()
             while free_slots:
-                trace = next((t for t in waiting
-                              if by_req[t.request_id].admissible(t)), None)
+                trace = next(
+                    (t for t in waiting
+                     if t.request_id not in skipped
+                     and by_req[t.request_id].admissible(t)), None)
                 if trace is None:
                     break
                 st = by_req[trace.request_id]
@@ -618,10 +903,41 @@ class Engine:
                          and len(trace.prompt_tokens) <= cap
                          and prefix_fits)
                 if fresh:
-                    ok = ensure_prefix(st, trace)
+                    L = len(trace.prompt_tokens)
+                    if (st.prefix is None and chunk is not None
+                            and L > chunk):
+                        # chunked path: open/advance the prefill job; the
+                        # trace admits once the prefix completes
+                        job = jobs.get(st.request_id)
+                        if job is None:
+                            job = _PrefillJob(
+                                st, mgr.reserve(mgr.blocks_for_tokens(L)),
+                                self.blocks_per_seq)
+                            jobs[st.request_id] = job
+                        before = job.pos
+                        status = advance_job(job, budget)
+                        if status == "ready":
+                            advanced = True
+                            continue  # re-pick: prefix now exists
+                        if job.pos > before:
+                            advanced = True
+                        if status == "memory":
+                            break
+                        skipped.add(st.request_id)
+                        continue
+                    if st.prefix is None and not budget.can(
+                            L, force=not running):
+                        skipped.add(st.request_id)
+                        continue
+                    ok = ensure_prefix(st, trace, budget)
                     if ok is None:
                         break
                     if ok is False:
+                        continue
+                    # the admitted trace decodes THIS tick: charge its
+                    # decode token so a tick never exceeds the budget
+                    if not budget.can(1, force=not running and not wave):
+                        skipped.add(st.request_id)
                         continue
                     # headroom for this trace's first private block (the
                     # COW copy of the prompt's tail block, or a fresh
@@ -633,10 +949,15 @@ class Engine:
                                                   at_admission=True):
                             break
                         continue
-                    admit_shared(trace, st, pending)
+                    budget.spend(1)
+                    admit_shared(trace, st, wave)
                 else:
-                    ids_len = len(trace.prompt_tokens) + \
-                        len(trace.output_tokens)
+                    ids_len = (len(trace.prompt_tokens)
+                               + len(trace.output_tokens))
+                    # prefill cost + the decode token of this same tick
+                    if not budget.can(ids_len + 1, force=not running):
+                        skipped.add(trace.request_id)
+                        continue
                     need = mgr.blocks_for_tokens(min(ids_len + 1, cap))
                     if not mgr.can_allocate(need):
                         # memory full at admission: STEP prunes,
@@ -649,20 +970,53 @@ class Engine:
                         if not mgr.can_allocate(need):
                             break
                         continue
+                    budget.spend(ids_len + 1)
                     admit_private(trace, st)
-            flush_first_tokens(pending)
+            flush_first_tokens(wave)
+            return advanced or bool(wave)
 
         # ------------------------------------------------------------
-        # main loop
+        # main tick loop
         # ------------------------------------------------------------
-        while waiting or running:
-            for st in states:
+        while pending or waiting or running or jobs:
+            now_rel = time.perf_counter() - t_start
+            admit_arrivals(now_rel)
+            if not (waiting or running or jobs):
+                # idle: nothing runnable until the next arrival
+                nxt = pending.next_arrival()
+                if nxt is not None:
+                    time.sleep(min(max(nxt - now_rel, 0.0), 0.02) + 1e-4)
+                continue
+
+            for st in started:
                 st.update_gate()
-            try_admit()
+            pressure = current_pressure()
+            for st in started:
+                if not st.done():
+                    st.policy.observe_pressure(pressure)
+
+            budget = _TokenBudget(
+                None if ecfg.max_tokens_per_step is None
+                else max(ecfg.max_tokens_per_step - len(running), 0))
+            progressed = try_admit(budget)
             if not running:
-                if waiting:  # deadlocked on memory: should not happen
+                if not (waiting or jobs or pending):
+                    break
+                if progressed:
+                    idle_ticks = 0
+                    continue
+                if pending:
+                    # arrivals still due: wait for them (not a deadlock)
+                    nxt = pending.next_arrival()
+                    now_rel = time.perf_counter() - t_start
+                    if nxt is not None and nxt > now_rel:
+                        time.sleep(min(nxt - now_rel, 0.02) + 1e-4)
+                    continue
+                idle_ticks += 1
+                if idle_ticks >= 3:
                     raise RuntimeError("no trace schedulable")
-                break
+                continue
+            idle_ticks = 0
 
             # ensure every running trace exclusively owns the block its
             # next token's KV will be written into: allocate fresh blocks
@@ -674,8 +1028,8 @@ class Engine:
                 pos = int(positions[slot])
                 widx = pos % cap  # decode writes at positions % window
                 bidx = widx // bs
-                if bidx < len(trace.blocks) and \
-                        not mgr.is_shared(trace.blocks[bidx]):
+                if (bidx < len(trace.blocks)
+                        and not mgr.is_shared(trace.blocks[bidx])):
                     continue
                 while not mgr.can_allocate(1):
                     if not handle_memory_full(trace, trace.request_id):
@@ -735,8 +1089,9 @@ class Engine:
                 if nt == tok.eos_id or trace.num_tokens >= ecfg.max_new_tokens:
                     finish(trace)
 
-            # signal-triggered termination (DeepConf / Slim-SC)
-            for st in states:
+            # signal-triggered termination (DeepConf / Slim-SC / STEP
+            # proactive pruning under admission pressure)
+            for st in started:
                 own = [t for t in running if t.request_id == st.request_id]
                 if not own:
                     continue
@@ -744,6 +1099,9 @@ class Engine:
                     if trace.status == TraceStatus.RUNNING:
                         release(trace, TraceStatus.PRUNED)
 
+        for job in list(jobs.values()):  # defensive: no job survives
+            job.abort()
+        jobs.clear()
         for st in states:  # defensive: no prefix may outlive its batch
             release_prefix(st)
         return peak_blocks

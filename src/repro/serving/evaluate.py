@@ -1,13 +1,14 @@
 """End-to-end evaluation harness: run problems through the engine under a
 method (cot / sc / slimsc / deepconf / step) and report the paper's three
 metrics — accuracy, avg output tokens, latency — plus the Table 3 phase
-breakdown (wait / decode / prefill).
+breakdown (wait / decode / prefill) and, for the continuous-batching
+path, the online-serving summary (TTFT / TPOT / e2e percentiles).
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -15,7 +16,8 @@ from repro.configs.base import ModelConfig
 from repro.core.pruning import make_policy
 from repro.data.arithmetic import Problem, gen_problem, make_prompt
 from repro.data.tokenizer import get_tokenizer
-from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving.engine import Engine, EngineConfig, Request, RequestResult
+from repro.serving.metrics import summarize
 
 
 @dataclasses.dataclass
@@ -31,6 +33,8 @@ class EvalResult:
     num_pruned: int
     num_preemptions: int
     per_problem: List[dict]
+    # online-serving summary (metrics.summarize) — batched path only
+    serving: Optional[dict] = None
 
 
 def make_problems(n: int, seed: int = 1234,
@@ -39,8 +43,22 @@ def make_problems(n: int, seed: int = 1234,
     return [gen_problem(rng, n_steps) for _ in range(n)]
 
 
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0) -> List[float]:
+    """Arrival offsets (seconds) for a Poisson process of ``rate_per_s``.
+
+    The benchmark's open-loop load model: exponential inter-arrival
+    gaps, cumulative. rate <= 0 degenerates to everything at t=0 (the
+    offline batch)."""
+    if rate_per_s <= 0:
+        return [0.0] * n
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    return list(np.cumsum(gaps))
+
+
 def _aggregate(method: str, n_traces: int, problems: List[Problem],
-               results, verbose: bool = False) -> EvalResult:
+               results: Sequence[RequestResult], verbose: bool = False,
+               with_serving: bool = False) -> EvalResult:
     """Fold per-request RequestResults into the paper's three metrics."""
     records = []
     totals = dict(wait=0.0, decode=0.0, prefill=0.0, pruned=0, preempt=0)
@@ -53,18 +71,27 @@ def _aggregate(method: str, n_traces: int, problems: List[Problem],
         totals["prefill"] += res.prefill_s
         totals["pruned"] += res.num_pruned
         totals["preempt"] += res.num_preemptions
-        records.append({
+        rec = {
             "qid": res.request_id, "answer": res.answer, "gold": p.answer,
             "correct": bool(ok), "tokens": res.total_tokens,
             "latency_s": res.latency_s, "wait_s": res.wait_s,
             "decode_s": res.decode_s, "prefill_s": res.prefill_s,
             "pruned": res.num_pruned, "preemptions": res.num_preemptions,
-        })
+        }
+        if res.metrics is not None:
+            rec["ttft_s"] = res.metrics.ttft_s
+            rec["tpot_s"] = res.metrics.tpot_s
+            rec["e2e_s"] = res.metrics.e2e_s
+        records.append(rec)
         if verbose:
             print(f"  [{method}] q{res.request_id}: ans={res.answer} "
                   f"gold={p.answer} ok={ok} tok={res.total_tokens} "
                   f"lat={res.latency_s:.2f}s wait={res.wait_s:.2f}s")
     n = max(len(problems), 1)
+    serving = None
+    if with_serving:
+        ms = [res.metrics for res in results if res.metrics is not None]
+        serving = summarize(ms) if ms else None
     return EvalResult(
         method=method, n_traces=n_traces,
         accuracy=correct / n,
@@ -73,7 +100,7 @@ def _aggregate(method: str, n_traces: int, problems: List[Problem],
         total_wait_s=totals["wait"], total_decode_s=totals["decode"],
         total_prefill_s=totals["prefill"],
         num_pruned=totals["pruned"], num_preemptions=totals["preempt"],
-        per_problem=records)
+        per_problem=records, serving=serving)
 
 
 def evaluate_method(method: str, params: dict, cfg: ModelConfig,
@@ -103,27 +130,39 @@ def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
                             ecfg: EngineConfig,
                             scorer_params: Optional[dict] = None,
                             policy_kwargs: Optional[dict] = None,
+                            arrival_times: Optional[Sequence[float]] = None,
+                            on_result: Optional[
+                                Callable[[RequestResult], None]] = None,
                             verbose: bool = False) -> EvalResult:
     """All problems submitted to ONE engine as a request queue: traces of
     different requests co-exist in the decode batch and contend for the
     shared block pool (the multi-request serving scenario). Each request
     gets a fresh policy instance so stateful policies (DeepConf warmup
     threshold, Slim-SC cursors) don't leak across concurrent requests.
+
+    ``arrival_times`` (seconds, per problem) turns the batch into an
+    online arrival trace (continuous batching); ``on_result`` streams
+    each request's ``RequestResult`` the moment it completes.
     """
     tok = get_tokenizer()
     policy_kwargs = dict(policy_kwargs or {})
     if method == "cot":
         n_traces = 1
+    if arrival_times is None:
+        arrival_times = [0.0] * len(problems)
+    assert len(arrival_times) == len(problems)
     requests = [
         Request(request_id=qid,
                 prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
                 n_traces=n_traces,
-                policy=make_policy(method, **policy_kwargs))
-        for qid, p in enumerate(problems)
+                policy=make_policy(method, **policy_kwargs),
+                arrival_time=float(at))
+        for qid, (p, at) in enumerate(zip(problems, arrival_times))
     ]
     default_policy = make_policy(method, **policy_kwargs)
     engine = Engine(params, cfg, ecfg, default_policy,
                     scorer_params=scorer_params
                     if default_policy.uses_scorer else None)
-    results = engine.serve_batch(requests)
-    return _aggregate(method, n_traces, problems, results, verbose=verbose)
+    results = engine.serve_batch(requests, on_complete=on_result)
+    return _aggregate(method, n_traces, problems, results, verbose=verbose,
+                      with_serving=True)

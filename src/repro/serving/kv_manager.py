@@ -17,6 +17,14 @@ A writer must hold a block exclusively — the engine checks
 shared, allocates a fresh block, device-copies the contents, and drops
 its reference on the original (the COW step). The allocator itself
 never touches device memory; it only tracks ownership.
+
+Chunk-granular reservation (continuous batching / chunked prefill): an
+in-flight prompt prefill draws its blocks chunk by chunk through a
+``Reservation`` instead of allocating the whole prompt up front. Blocks
+already taken hold completed chunks' KV; ``take`` extends the holding as
+later chunks are computed; ``abort`` returns everything to the pool if
+the prefill is cancelled under memory pressure; ``commit`` transfers
+ownership of the full set to the caller (the shared-prefix holder).
 """
 from __future__ import annotations
 
@@ -97,6 +105,14 @@ class BlockManager:
                 self._free.append(b)
                 self._free_set.add(b)
 
+    def reserve(self, total_blocks: int) -> "Reservation":
+        """Open a chunk-granular reservation for ``total_blocks`` blocks.
+
+        Nothing is allocated yet; the caller draws blocks incrementally
+        with ``Reservation.take`` as prefill chunks complete.
+        """
+        return Reservation(self, total_blocks)
+
     def check_invariants(self) -> None:
         assert len(set(self._free)) == len(self._free)
         assert self._free_set == set(self._free)
@@ -105,3 +121,58 @@ class BlockManager:
         # every non-scratch block is exactly one of {free, live}
         assert not (self._free_set & self._refcounts.keys())
         assert len(self._free) + len(self._refcounts) == self.num_blocks - 1
+
+
+class Reservation:
+    """Incremental block holding for an in-flight (chunked) prefill.
+
+    Lifecycle: ``take`` zero or more times (each call either allocates
+    the requested blocks or, when the free list is short, takes nothing
+    and returns None so the caller can apply memory pressure), then
+    exactly one of ``commit`` (ownership moves to the caller) or
+    ``abort`` (blocks return to the pool). A reservation never holds
+    more than ``total_blocks``.
+    """
+
+    def __init__(self, mgr: BlockManager, total_blocks: int):
+        assert total_blocks >= 0
+        self.mgr = mgr
+        self.total_blocks = total_blocks
+        self.taken: List[int] = []
+        self._closed = False
+
+    @property
+    def num_taken(self) -> int:
+        return len(self.taken)
+
+    @property
+    def remaining(self) -> int:
+        return self.total_blocks - len(self.taken)
+
+    def take(self, n_blocks: int) -> Optional[List[int]]:
+        """Draw ``n_blocks`` more blocks; all-or-nothing per call."""
+        assert not self._closed, "take on a closed reservation"
+        assert n_blocks <= self.remaining, "reservation overdraw"
+        if n_blocks == 0:
+            return []
+        got = self.mgr.allocate(n_blocks)
+        if got is None:
+            return None
+        self.taken.extend(got)
+        return got
+
+    def commit(self) -> List[int]:
+        """Close the reservation; the caller now owns the taken blocks."""
+        assert not self._closed
+        self._closed = True
+        out = self.taken
+        self.taken = []
+        return out
+
+    def abort(self) -> None:
+        """Cancel: return every taken block to the pool."""
+        assert not self._closed
+        self._closed = True
+        if self.taken:
+            self.mgr.free(self.taken)
+            self.taken = []

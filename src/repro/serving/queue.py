@@ -1,0 +1,59 @@
+"""Online request queue for the continuous-batching scheduler.
+
+Requests carry an ``arrival_time`` (seconds relative to the start of the
+serve loop). The queue releases a request to the scheduler only once the
+engine clock passes its arrival time, which is what turns ``serve_batch``
+from an offline batch runner into an online-serving simulation: the
+scheduler admits work wave by wave as it arrives, decode keeps running
+between waves, and time-to-first-token is measured against the arrival
+instant rather than the batch start.
+
+Ordering: requests are released in (arrival_time, submission index)
+order, so two requests arriving at the same instant keep their
+submission order — with every arrival at t=0 the scheduler sees exactly
+the PR-1 ``serve_batch`` admission sequence.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+
+def _arrival(request) -> float:
+    """A request's arrival time; missing/None means immediately."""
+    return getattr(request, "arrival_time", 0.0) or 0.0
+
+
+class RequestQueue:
+    """Arrival-ordered queue of not-yet-started requests."""
+
+    def __init__(self, requests: Sequence = ()):
+        # stable sort on arrival time alone: requests sharing an arrival
+        # instant keep their submission order
+        self._pending: List = sorted(requests, key=_arrival)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def __bool__(self) -> bool:
+        return bool(self._pending)
+
+    def push(self, request) -> None:
+        """Insert a late submission, keeping arrival order."""
+        at = _arrival(request)
+        i = 0
+        while i < len(self._pending) and _arrival(self._pending[i]) <= at:
+            i += 1
+        self._pending.insert(i, request)
+
+    def next_arrival(self) -> Optional[float]:
+        """Arrival time of the earliest pending request (None if empty)."""
+        if not self._pending:
+            return None
+        return _arrival(self._pending[0])
+
+    def pop_arrived(self, now: float) -> List:
+        """Release every request whose arrival time has passed."""
+        out: List = []
+        while self._pending and _arrival(self._pending[0]) <= now:
+            out.append(self._pending.pop(0))
+        return out

@@ -1,0 +1,196 @@
+"""Continuous-batching scheduler tests: offline equivalence, arrival
+orderings, chunked prefill, serving metrics, streaming callbacks."""
+import jax
+import pytest
+
+from repro.configs.registry import serving_config
+from repro.core.pruning import AdmissionPressure, make_policy
+from repro.core.trace import TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.models.init import init_params
+from repro.serving import Engine, EngineConfig, Request, SamplingParams
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+    prompts = [tok.encode("3+5-2=", add_bos=True),
+               tok.encode("7*2+1=", add_bos=True),
+               tok.encode("9-4+6=", add_bos=True)]
+    return cfg, params, prompts
+
+
+def _ecfg(num_blocks=64, max_new=16, batch=8, chunk=None, budget=None):
+    return EngineConfig(
+        max_batch=batch, num_blocks=num_blocks, capacity=128,
+        max_new_tokens=max_new,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=max_new),
+        prefill_chunk_size=chunk, max_tokens_per_step=budget)
+
+
+def _reqs(prompts, n=2, arrivals=None, method="sc"):
+    arrivals = arrivals or [0.0] * len(prompts)
+    return [Request(request_id=i, prompt_tokens=p, n_traces=n,
+                    policy=make_policy(method), arrival_time=a)
+            for i, (p, a) in enumerate(zip(prompts, arrivals))]
+
+
+def _token_sets(results):
+    return {r.request_id: [t.output_tokens for t in r.traces]
+            for r in results}
+
+
+def test_t0_batch_matches_serial_serve_greedy(setup):
+    """All arrivals at t=0, chunking off: the continuous scheduler must
+    generate exactly what serving each request alone generates (greedy,
+    roomy pool) — the offline-equivalence acceptance criterion."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    batched = _token_sets(eng.serve_batch(_reqs(prompts)))
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    for i, p in enumerate(prompts):
+        eng1 = Engine(params, cfg, _ecfg(), make_policy("sc"))
+        solo = eng1.serve(p, 2, request_id=i)
+        assert [t.output_tokens for t in solo.traces] == batched[i]
+
+
+def test_arrival_order_invariance(setup):
+    """Order-insensitive policy (sc) + greedy + roomy pool: shuffling the
+    submission order of simultaneous arrivals must not change any
+    request's generated tokens."""
+    cfg, params, prompts = setup
+    outs = []
+    for order in ([0, 1, 2], [2, 0, 1], [1, 2, 0]):
+        eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+        reqs = _reqs(prompts)
+        results = eng.serve_batch([reqs[i] for i in order])
+        outs.append(_token_sets(results))
+        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        eng.block_mgr.check_invariants()
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_chunked_prefill_matches_unchunked(setup):
+    """Chunked prefill equivalence: greedy outputs are identical whether
+    the prompt prefills in one shot or in 4-token chunks."""
+    cfg, params, prompts = setup
+    outs = []
+    for chunk in (None, 4):
+        eng = Engine(params, cfg, _ecfg(chunk=chunk), make_policy("sc"))
+        results = eng.serve_batch(_reqs(prompts))
+        outs.append(_token_sets(results))
+        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        eng.block_mgr.check_invariants()
+    assert outs[0] == outs[1]
+
+
+def test_chunked_prefill_token_budget(setup):
+    """A tight per-tick token budget throttles admission but every trace
+    still completes with correct accounting."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(chunk=4, budget=8), make_policy("sc"))
+    results = eng.serve_batch(_reqs(prompts))
+    for r in results:
+        assert all(t.status == TraceStatus.FINISHED for t in r.traces)
+        assert r.metrics is not None and r.metrics.ttft_s >= 0
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_late_arrival_and_completion_stream(setup):
+    """A request arriving later must not see tokens before its arrival
+    time; completion callbacks stream in completion order."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(max_new=24), make_policy("sc"))
+    done = []
+    reqs = _reqs(prompts[:2], arrivals=[0.0, 0.3])
+    results = eng.serve_batch(reqs, on_complete=lambda r: done.append(r))
+    assert [r.request_id for r in done] == [0, 1]
+    m0, m1 = results[0].metrics, results[1].metrics
+    assert m0.arrival_s == 0.0 and m1.arrival_s == 0.3
+    assert m1.first_token_s >= 0.3
+    assert m1.ttft_s >= 0.0
+    for r in results:
+        assert all(t.status == TraceStatus.FINISHED for t in r.traces)
+    # streamed objects are the same results returned at the end
+    assert {id(r) for r in done} == {id(r) for r in results}
+
+
+def test_metrics_under_forced_preemption(setup):
+    """TTFT/TPOT accounting stays consistent when a tight pool forces
+    preemption (discard-and-recompute) on an sc baseline."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(num_blocks=12, max_new=100),
+                 make_policy("sc"))
+    res = eng.serve(prompts[0], 8)
+    m = res.metrics
+    assert res.num_preemptions > 0 and res.wait_s > 0
+    assert m.num_preemptions == res.num_preemptions
+    assert m.wait_s == pytest.approx(res.wait_s)
+    assert m.first_token_s is not None and m.finished_s is not None
+    assert m.arrival_s <= m.first_token_s <= m.finished_s
+    assert m.ttft_s >= 0 and m.tpot_s >= 0
+    assert m.e2e_s == pytest.approx(res.latency_s, rel=1e-6)
+    assert m.output_tokens == res.total_tokens
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_policies_observe_admission_pressure(setup):
+    """The scheduler publishes an AdmissionPressure snapshot to each
+    active request's policy every tick."""
+    cfg, params, prompts = setup
+    seen = []
+
+    class Spy(type(make_policy("sc"))):
+        def observe_pressure(self, pressure):
+            super().observe_pressure(pressure)
+            seen.append(pressure)
+
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    reqs = [Request(request_id=0, prompt_tokens=prompts[0], n_traces=2,
+                    policy=Spy())]
+    eng.serve_batch(reqs)
+    assert seen
+    assert all(isinstance(p, AdmissionPressure) for p in seen)
+    assert all(0.0 <= p.memory_utilization <= 1.0 for p in seen)
+
+
+def test_step_proactive_pruning_under_pressure(setup):
+    """StepPolicy(proactive_free_blocks>0) prunes ahead of OOM when
+    traces are waiting and the free pool is low."""
+    cfg, params, prompts = setup
+    scorer = None
+    from repro.core.scorer import init_scorer
+    scorer = init_scorer(jax.random.PRNGKey(1), cfg.d_model)
+    policy = make_policy("step", proactive_free_blocks=10**6)  # always low
+    eng = Engine(params, cfg,
+                 EngineConfig(max_batch=2, num_blocks=64, capacity=128,
+                              max_new_tokens=64,
+                              sampling=SamplingParams(max_new_tokens=64)),
+                 policy, scorer_params=scorer)
+    # max_batch=2 < n_traces keeps traces waiting => demand > 0
+    res = eng.serve_batch([Request(request_id=0,
+                                   prompt_tokens=prompts[0],
+                                   n_traces=6, policy=policy)])[0]
+    assert res.num_pruned > 0
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+
+
+def test_request_queue_ordering():
+    from repro.serving import RequestQueue
+    reqs = [Request(request_id=i, prompt_tokens=[1], n_traces=1,
+                    arrival_time=a)
+            for i, a in enumerate([0.5, 0.0, 0.0, 1.5])]
+    q = RequestQueue(reqs)
+    assert len(q) == 4
+    assert q.next_arrival() == 0.0
+    first = q.pop_arrived(0.0)
+    assert [r.request_id for r in first] == [1, 2]  # submission order kept
+    assert q.next_arrival() == 0.5
+    assert [r.request_id for r in q.pop_arrived(0.4)] == []
+    assert [r.request_id for r in q.pop_arrived(2.0)] == [0, 3]
+    assert not q
+    q.push(reqs[0])
+    assert len(q) == 1 and q.next_arrival() == 0.5

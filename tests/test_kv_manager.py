@@ -124,3 +124,59 @@ def test_invariants_under_random_alloc_fork_free(num_blocks, ops):
         mgr.free(h)
     assert mgr.free_blocks == num_blocks - 1
     mgr.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular reservations (chunked prefill)
+# ---------------------------------------------------------------------------
+
+def test_reservation_take_commit():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    res = mgr.reserve(4)
+    assert res.remaining == 4 and res.num_taken == 0
+    first = res.take(2)
+    assert len(first) == 2 and res.remaining == 2
+    assert mgr.used_blocks == 2
+    second = res.take(2)
+    assert len(second) == 2 and res.remaining == 0
+    blocks = res.commit()
+    assert blocks == first + second
+    # committed blocks are owned by the caller, with one reference each
+    assert all(mgr.ref_count(b) == 1 for b in blocks)
+    mgr.free(blocks)
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_reservation_take_is_all_or_nothing():
+    mgr = BlockManager(num_blocks=5, block_size=16)  # 4 usable
+    other = mgr.allocate(3)
+    res = mgr.reserve(4)
+    assert res.take(2) is None  # only 1 free: nothing taken
+    assert res.num_taken == 0 and mgr.free_blocks == 1
+    assert len(res.take(1)) == 1
+    mgr.free(other)
+    assert len(res.take(3)) == 3
+    blocks = res.commit()
+    mgr.free(blocks)
+    mgr.check_invariants()
+
+
+def test_reservation_abort_returns_blocks():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    res = mgr.reserve(3)
+    res.take(3)
+    assert mgr.free_blocks == 4
+    res.abort()
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+    with pytest.raises(AssertionError):
+        res.take(1)  # closed
+
+
+def test_reservation_overdraw_asserts():
+    mgr = BlockManager(num_blocks=8, block_size=16)
+    res = mgr.reserve(2)
+    res.take(2)
+    with pytest.raises(AssertionError):
+        res.take(1)

@@ -1,0 +1,67 @@
+"""Serving-metrics unit tests: TTFT/TPOT/e2e derivation, percentile
+interpolation, and the BENCH_serving.json summary payload."""
+import math
+
+import pytest
+
+from repro.serving.metrics import RequestMetrics, percentiles, summarize
+
+
+def _m(rid=0, arrival=0.0, first=1.0, finish=3.0, out_tokens=21, **kw):
+    return RequestMetrics(
+        request_id=rid, arrival_s=arrival, admitted_s=arrival + 0.1,
+        first_token_s=first, finished_s=finish, prompt_tokens=7,
+        output_tokens=out_tokens, n_traces=3, **kw)
+
+
+def test_derived_latencies():
+    m = _m(arrival=0.5, first=1.5, finish=3.5, out_tokens=21)
+    assert m.ttft_s == pytest.approx(1.0)
+    assert m.e2e_s == pytest.approx(3.0)
+    assert m.tpot_s == pytest.approx(2.0 / 20)  # finish-first over n-1
+
+
+def test_unfinished_request_has_none_latencies():
+    m = RequestMetrics(request_id=1, arrival_s=0.0, admitted_s=None,
+                       first_token_s=None, finished_s=None)
+    assert m.ttft_s is None and m.tpot_s is None and m.e2e_s is None
+    assert math.isnan(summarize([m])["mean_ttft_s"])
+
+
+def test_single_token_tpot_does_not_divide_by_zero():
+    m = _m(out_tokens=1)
+    assert m.tpot_s == pytest.approx(2.0)  # denominator floored at 1
+
+
+def test_percentiles_interpolate():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    p = percentiles(xs, ps=(50, 90, 99, 100))
+    assert p["p50"] == pytest.approx(2.5)
+    assert p["p100"] == pytest.approx(4.0)
+    assert p["p90"] == pytest.approx(3.7)
+    assert percentiles([5.0])["p99"] == 5.0
+    assert math.isnan(percentiles([])["p50"])
+
+
+def test_summarize_payload():
+    ms = [_m(rid=0, arrival=0.0, first=0.5, finish=2.0, out_tokens=10),
+          _m(rid=1, arrival=1.0, first=1.5, finish=4.0, out_tokens=30,
+             num_pruned=2, wait_s=0.25)]
+    s = summarize(ms)
+    assert s["num_requests"] == 2 and s["num_completed"] == 2
+    assert s["total_output_tokens"] == 40
+    assert s["makespan_s"] == pytest.approx(4.0)
+    assert s["throughput_tok_per_s"] == pytest.approx(10.0)
+    assert s["ttft_s"]["p50"] == pytest.approx(0.5)
+    assert s["e2e_s"]["p99"] == pytest.approx(
+        2.0 + 0.99 * 1.0)  # interpolated between 2.0 and 3.0
+    assert s["num_pruned"] == 2
+    assert s["total_wait_s"] == pytest.approx(0.25)
+    assert s["mean_ttft_s"] == pytest.approx(0.5)
+
+
+def test_to_dict_round_trip():
+    d = _m().to_dict()
+    assert d["ttft_s"] == pytest.approx(1.0)
+    assert d["output_tokens"] == 21
+    assert d["request_id"] == 0
