@@ -25,6 +25,7 @@ REF_DIR = os.path.join(os.path.dirname(__file__), "reference")
 #   min_ratio r: new >= ref * r   (higher is better: throughput, speedups)
 #   equal:       new == ref       (structural)
 #   min_frac f:  new >= ref * f   (counts that must not collapse)
+#   min_abs b:   new >= b         (reference-independent floor)
 RULES = {
     "serving_load": [
         ("num_completed", "equal", None),
@@ -41,6 +42,16 @@ RULES = {
         ("prefill_speedup_x", "min_ratio", 0.3),
         ("peak_blocks_saved", "min_frac", 1.0),
         ("shared.prefill_s", "max_ratio", 5.0),
+    ],
+    "decode_throughput": [
+        # identical greedy outputs at every horizon, full-length runs
+        ("outputs_identical", "equal", None),
+        ("horizons.1.tokens", "equal", None),
+        ("horizons.8.tokens", "equal", None),
+        # the decode-horizon acceptance floor: >= 1.5x tokens/s at K=8
+        ("speedup_8x", "min_abs", 1.5),
+        ("speedup_4x", "min_ratio", 0.3),
+        ("horizons.8.tok_per_s", "min_ratio", 0.2),
     ],
 }
 
@@ -81,6 +92,10 @@ def check(new_path: str, ref_path: str) -> list:
             problems.append(
                 f"{bench}.{path}: {nv:.4g} below reference "
                 f"{rv:.4g} x{bound}")
+        elif kind == "min_abs" and nv < bound:
+            problems.append(
+                f"{bench}.{path}: {nv:.4g} below absolute floor "
+                f"{bound} (regression)")
     return problems
 
 

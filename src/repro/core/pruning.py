@@ -67,6 +67,22 @@ class PruningPolicy:
         """Scheduler-tick hook: record the current admission pressure."""
         self.last_pressure = pressure
 
+    def observe_decode_burst(self, trace: Trace, tokens: Sequence[int],
+                             confidences: Sequence[float],
+                             step_scores: Sequence[float]) -> None:
+        """Per-trace per-tick burst hook (decode horizon).
+
+        With ``EngineConfig.decode_horizon`` K > 1 the engine emits up to
+        K tokens per trace per scheduler tick; the burst (already
+        appended to ``trace``) is handed over in one call instead of K
+        one-at-a-time appends. Termination sweeps
+        (``traces_to_terminate``) therefore run at horizon granularity:
+        a policy reacting to a signal inside the burst can terminate the
+        trace at the next sweep, at most K-1 tokens late. The base
+        implementation records nothing; stateful policies may override
+        to update incremental signal aggregates.
+        """
+
     def traces_to_terminate(self, running: Sequence[Trace]) -> List[Trace]:
         return []
 

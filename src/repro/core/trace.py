@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 
 class TraceStatus(enum.Enum):
@@ -41,6 +41,19 @@ class Trace:
 
     def add_step_score(self, s: float) -> None:
         self.step_scores.append(float(s))
+
+    def add_step_scores(self, scores: Sequence[float]) -> None:
+        """Burst append: one scheduler tick may close several reasoning
+        steps when the engine decodes a multi-token horizon."""
+        self.step_scores.extend(float(s) for s in scores)
+
+    def extend_output(self, tokens: Sequence[int],
+                      confidences: Sequence[float]) -> None:
+        """Burst append of decoded tokens + their confidences (one call
+        per scheduler tick instead of one per token)."""
+        assert len(tokens) == len(confidences)
+        self.output_tokens.extend(int(t) for t in tokens)
+        self.token_confidences.extend(float(c) for c in confidences)
 
     @property
     def score(self) -> float:

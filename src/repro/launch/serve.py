@@ -43,6 +43,9 @@ def main():
     ap.add_argument("--max-tokens-per-step", type=int, default=0,
                     help="per-tick token budget shared by decode and "
                          "prefill (0 = unlimited)")
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="fused decode horizon: K decode iterations per "
+                         "jitted device call (1 = one token per tick)")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
     args = ap.parse_args()
@@ -55,7 +58,8 @@ def main():
         max_new_tokens=args.max_new,
         sampling=SamplingParams(max_new_tokens=args.max_new),
         prefill_chunk_size=args.chunk or None,
-        max_tokens_per_step=args.max_tokens_per_step or None)
+        max_tokens_per_step=args.max_tokens_per_step or None,
+        decode_horizon=args.decode_horizon)
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \

@@ -342,6 +342,102 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# fused multi-token decode horizon: K decode iterations per device call
+# ---------------------------------------------------------------------------
+
+def multi_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      positions: jax.Array, limits: jax.Array, cache: dict,
+                      *, window_len: int, horizon: int, rng_keys: jax.Array,
+                      sample_fn, eos_id: int, step_id: int,
+                      score_fn=None, scratch_block: int = 0,
+                      use_kernel: bool = False) -> dict:
+    """Run ``horizon`` decode iterations inside one ``lax.scan``.
+
+    The host consumes tokens/confidences/step-scores once per K tokens
+    instead of paying a device->host round trip per token — the decode
+    horizon behind ``EngineConfig.decode_horizon``.
+
+    Inputs (all fixed-shape over the decode batch B):
+      tokens    [B]   previous sampled token per lane (the decode input)
+      positions [B]   absolute write position of that token
+      limits    [B]   per-lane iteration cap (<= horizon): lanes stop
+                      after ``limits`` emitted tokens (remaining
+                      max-new-token allowance / secured frontier blocks);
+                      0 marks a dead slot that never runs
+      rng_keys  [K, 2] one PRNG key per iteration, shared by all lanes —
+                      the same key stream K successive single-token
+                      ticks would consume, so horizon=K reproduces
+                      horizon=1 token-for-token under a fixed RNG as
+                      long as scheduling stays aligned (a lane
+                      shortened below the full horizon by memory
+                      contention falls behind the shared key stream —
+                      but in that regime horizon=1 makes different
+                      pruning decisions anyway; greedy sampling is
+                      key-free and only subject to the scheduling-level
+                      divergence)
+      sample_fn (key, logits [B, Vp]) -> (tokens [B], conf [B]); applies
+                      vocab masking + temperature/top-k/top-p
+      score_fn  optional (hidden [B, D]) -> [B] step scorer, evaluated
+                      every iteration and validity-masked to step
+                      boundaries (input token == ``step_id``)
+
+    Lane lifecycle inside the scan: a lane is *active* until it emits
+    ``eos_id`` or exhausts its limit. Inactive lanes keep decoding (the
+    batch shape is fixed) but their block-table row is repointed at
+    ``scratch_block`` (the allocator's dead-slot block) so their KV
+    writes land in scratch, their positions freeze, and their outputs
+    are validity-masked — exactly the host scheduler's dead-slot
+    convention.
+
+    Returns {tokens [B, K], confidences [B, K], scores [B, K],
+    token_valid [B, K], score_valid [B, K], final_tokens [B],
+    positions [B], cache} where ``token_valid`` marks a contiguous
+    emitted prefix per lane and ``score_valid`` the step-boundary subset.
+    ``cache`` excludes ``block_tables`` (the in-scan copy is scratch-
+    masked and not meaningful to the caller).
+    """
+    B = tokens.shape[0]
+    active0 = limits > 0
+    bt0 = jnp.where(active0[:, None], cache["block_tables"], scratch_block)
+    pools = {k: v for k, v in cache.items() if k != "block_tables"}
+
+    def body(carry, xs):
+        pools, ct, pos, active, bt = carry
+        key, k = xs
+        c = dict(pools)
+        c["block_tables"] = bt
+        out = decode_step(params, cfg, ct[:, None], pos, c,
+                          window_len=window_len, use_kernel=use_kernel)
+        nt, conf = sample_fn(key, out["logits"])
+        if score_fn is not None:
+            scores = score_fn(out["hidden"])
+        else:
+            scores = jnp.zeros((B,), jnp.float32)
+        token_valid = active
+        # the hidden state belongs to the input token; boundary => the
+        # previous token closed a reasoning step
+        score_valid = active & (ct == step_id)
+        nt = jnp.where(active, nt, ct)  # frozen lanes re-feed their token
+        new_active = active & (nt != eos_id) & (k + 1 < limits)
+        new_pos = pos + active.astype(pos.dtype)
+        new_bt = jnp.where(new_active[:, None], bt, scratch_block)
+        new_pools = out["cache"]
+        new_pools.pop("block_tables", None)
+        return ((new_pools, nt, new_pos, new_active, new_bt),
+                (nt, conf, scores, token_valid, score_valid))
+
+    carry0 = (pools, tokens, positions, active0, bt0)
+    (pools, ct, pos, _, _), ys = jax.lax.scan(
+        body, carry0, (rng_keys, jnp.arange(horizon)))
+    toks, confs, scores, tok_valid, score_valid = ys
+    return {
+        "tokens": toks.T, "confidences": confs.T, "scores": scores.T,
+        "token_valid": tok_valid.T, "score_valid": score_valid.T,
+        "final_tokens": ct, "positions": pos, "cache": pools,
+    }
+
+
+# ---------------------------------------------------------------------------
 # chunked prefill against the paged cache (continuous-batching engine)
 # ---------------------------------------------------------------------------
 

@@ -82,13 +82,15 @@ from repro.data.arithmetic import extract_answer
 from repro.core.scorer import scorer_score
 from repro.core.trace import Trace, TraceStatus
 from repro.data.tokenizer import get_tokenizer
-from repro.models.model import (copy_kv_block, decode_step, forward_full,
-                                init_decode_cache, prefill_chunk_step,
-                                supports_chunked_prefill, write_prefill_kv)
+from repro.models.model import (copy_kv_block, forward_full,
+                                init_decode_cache, multi_decode_step,
+                                prefill_chunk_step, supports_chunked_prefill,
+                                write_prefill_kv)
 from repro.serving.kv_manager import BlockManager, Reservation
 from repro.serving.metrics import RequestMetrics
 from repro.serving.queue import RequestQueue
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import (SamplingParams, sample_logits,
+                                    sample_tokens)
 
 
 @dataclasses.dataclass
@@ -113,6 +115,20 @@ class EngineConfig:
     # trace) and prefill tokens (chunks + one-shot prefills). None =
     # unlimited (admission bounded only by slots and blocks).
     max_tokens_per_step: Optional[int] = None
+    # Decode horizon: run K decode iterations inside ONE jitted device
+    # call (fused lax.scan with on-device sampling, EOS masking and
+    # step-boundary score capture) and sync tokens/confidences/scores to
+    # the host once per K tokens. 1 (default) reproduces the one-token-
+    # per-tick scheduler exactly; K>1 amortizes the device->host round
+    # trip and the Python tick overhead over K tokens, and generates
+    # token-identical traces while scheduling stays aligned — i.e.
+    # until memory contention shifts prune/preempt decisions, which
+    # land at horizon granularity (greedy sampling is additionally
+    # key-free, so it never depends on key-stream alignment — see
+    # docs/ENGINE.md). Under admission pressure with a short free list
+    # the engine falls back to a single-token tick so frontier
+    # pre-allocation never starves waiting work.
+    decode_horizon: int = 1
 
 
 @dataclasses.dataclass
@@ -287,6 +303,10 @@ class Engine:
         self.block_mgr = BlockManager(ecfg.num_blocks, bs)
         self._rng = jax.random.PRNGKey(ecfg.seed)
         self._chunk_supported = supports_chunked_prefill(cfg)
+        assert ecfg.decode_horizon >= 1, "decode_horizon must be >= 1"
+        # ticks where admission pressure forced the horizon down to 1
+        # (observable for tests/benchmarks)
+        self.horizon_fallbacks = 0
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -298,28 +318,52 @@ class Engine:
         sp = ecfg.sampling
 
         V = cfg.vocab_size  # mask vocab padding out of the sampler
+        eos_id = self.tok.eos_id
+        step_id = self.tok.step_id
 
-        @partial(jax.jit, donate_argnums=(1,))
-        def batched_decode(params, cache, tokens, positions, block_tables,
-                           rng, scorer_params):
-            cache = dict(cache)
-            cache["block_tables"] = block_tables
-            out = decode_step(params, cfg, tokens, positions, cache,
-                              window_len=ecfg.capacity,
-                              use_kernel=ecfg.use_kernel)
-            logits = out["logits"].at[:, V:].set(-jnp.inf)
-            new_tokens, conf = sample_tokens(
-                rng, logits, temperature=sp.temperature,
-                top_k=sp.top_k, top_p=sp.top_p)
-            if has_scorer:
-                scores = scorer_score(scorer_params, out["hidden"])
-            else:
-                scores = jnp.zeros((tokens.shape[0],), jnp.float32)
-            new_cache = out["cache"]
-            new_cache.pop("block_tables", None)
-            return new_tokens, conf, scores, new_cache
+        def sample_fn(key, logits):
+            logits = logits.at[:, V:].set(-jnp.inf)
+            return sample_logits(key, logits, temperature=sp.temperature,
+                                 top_k=sp.top_k, top_p=sp.top_p)
 
-        self._decode = batched_decode
+        def make_decode(horizon):
+            """Fused K-iteration decode; one jit instance per horizon."""
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def batched_decode(params, cache, tokens, positions, limits,
+                               block_tables, rng, scorer_params):
+                cache = dict(cache)
+                cache["block_tables"] = block_tables
+                score_fn = ((lambda h: scorer_score(scorer_params, h))
+                            if has_scorer else None)
+                # derive the per-iteration keys in-graph, exactly as K
+                # successive host-side ticks would (rng, k = split(rng)
+                # per token) — one device call replaces K split
+                # dispatches + a stack per tick
+                keys = []
+                for _ in range(horizon):
+                    rng, k = jax.random.split(rng)
+                    keys.append(k)
+                out = multi_decode_step(
+                    params, cfg, tokens, positions, limits, cache,
+                    window_len=ecfg.capacity, horizon=horizon,
+                    rng_keys=jnp.stack(keys), sample_fn=sample_fn,
+                    eos_id=eos_id, step_id=step_id, score_fn=score_fn,
+                    scratch_block=self.block_mgr.scratch_block,
+                    use_kernel=ecfg.use_kernel)
+                pools = out["cache"]
+                pools.pop("block_tables", None)
+                return (out["tokens"], out["confidences"], out["scores"],
+                        out["token_valid"], out["score_valid"],
+                        out["final_tokens"], out["positions"], pools, rng)
+
+            return batched_decode
+
+        self._decode = make_decode(ecfg.decode_horizon)
+        # pressure-fallback path: single-token ticks while waiting work
+        # contends for a short free list (same instance when K == 1)
+        self._decode_single = (self._decode if ecfg.decode_horizon == 1
+                               else make_decode(1))
 
         @jax.jit
         def prefill(params, tokens):
@@ -542,6 +586,15 @@ class Engine:
         block_tables = np.zeros((B, self.blocks_per_seq), np.int32)
         positions = np.zeros((B,), np.int32)
         cur_tokens = np.zeros((B,), np.int32)
+        # Device-resident mirrors of the decode-state arrays. The host
+        # copies above stay authoritative for scheduling math; the device
+        # copies are re-uploaded only when a host-side event (admission,
+        # COW/frontier repoint, release) dirties them. In steady-state
+        # decode the fused step hands back next-tick tokens/positions as
+        # device arrays, so nothing round-trips through jnp.asarray.
+        dev = {"tokens": None, "positions": None, "block_tables": None}
+        dirty = {"tokens": True, "positions": True, "block_tables": True}
+        K_cfg = ecfg.decode_horizon
         free_slots = list(range(B))
         running: List[Trace] = []
         waiting: List[Trace] = []
@@ -581,6 +634,7 @@ class Engine:
                 s = trace.batch_slot
                 block_tables[s, :] = mgr.scratch_block
                 positions[s] = 0
+                dirty["block_tables"] = dirty["positions"] = True
                 cache = self._clear_slot_state(cache, s)
                 free_slots.append(s)
                 trace.batch_slot = -1
@@ -677,6 +731,53 @@ class Engine:
             text = tok.decode(trace.output_tokens)
             trace.answer = extract_answer(text)
             release(trace, TraceStatus.FINISHED)
+
+        def owns_write_block(trace: Trace, bidx: int) -> bool:
+            return (bidx < len(trace.blocks)
+                    and not mgr.is_shared(trace.blocks[bidx]))
+
+        def claim_write_block(trace: Trace, bidx: int) -> None:
+            """Make ``trace`` the exclusive owner of its write block at
+            ``bidx``: a fresh block at the growth frontier, or a COW
+            copy of a still-shared (prompt) block — the first private
+            write, or a window wrap re-entering shared blocks. The
+            caller has ensured a free block exists."""
+            nonlocal cache
+            blk = mgr.allocate(1)
+            note_peak()
+            if bidx < len(trace.blocks):
+                old = trace.blocks[bidx]
+                cache = self._copy_block(cache, old, blk[0])
+                mgr.free([old])
+                trace.blocks[bidx] = blk[0]
+            else:
+                trace.blocks.extend(blk)
+            block_tables[trace.batch_slot, bidx] = blk[0]
+            dirty["block_tables"] = True
+
+        def frontier_walk(trace: Trace, k_tick: int):
+            """Yield (token offset j, block index) over ``trace``'s
+            next-``k_tick``-token write window, beyond the next token
+            (whose block the COW/grow pass already guarantees)."""
+            p = int(positions[trace.batch_slot])
+            want = min(k_tick,
+                       max(ecfg.max_new_tokens - trace.num_tokens, 1))
+            for j in range(1, want):
+                yield j, ((p + j) % cap) // bs
+
+        def extend_frontier(trace: Trace, k_tick: int) -> int:
+            """Secure exclusively-owned write blocks for up to
+            ``k_tick`` upcoming tokens of one trace. Best-effort: a
+            short free list shortens the lane's horizon, it never
+            triggers pruning/preemption."""
+            secured = 1
+            for j, bidx in frontier_walk(trace, k_tick):
+                if not owns_write_block(trace, bidx):
+                    if not mgr.can_allocate(1):
+                        break
+                    claim_write_block(trace, bidx)
+                secured = j + 1
+            return secured
 
         def start_wait_clock(st: _ReqState):
             """Memory-blocked before admission: start the WAIT clock of
@@ -803,6 +904,7 @@ class Engine:
             row[:len(trace.blocks)] = trace.blocks
             block_tables[slot] = row
             positions[slot] = prefix.seq_len
+            dirty["block_tables"] = dirty["positions"] = True
             if prefix.slot_state is not None:
                 cache = self._write_slot_state(cache, prefix.slot_state, slot)
             wave.append(trace)
@@ -837,6 +939,8 @@ class Engine:
             cache_new = self._write_prefill(cache, kvs, slot, row, len(ids))
             # next token continues from the last prefill logit
             positions[slot] = len(ids)
+            dirty["block_tables"] = dirty["positions"] = True
+            dirty["tokens"] = True
             self._rng, k = jax.random.split(self._rng)
             sp = ecfg.sampling
             nt, conf = sample_tokens(
@@ -863,12 +967,13 @@ class Engine:
             nt, conf = sample_tokens(
                 k, logits, temperature=sp.temperature,
                 top_k=sp.top_k, top_p=sp.top_p)
-            nt = np.asarray(nt)
-            conf = np.asarray(conf)
+            nt = np.asarray(nt).tolist()
+            conf = np.asarray(conf).tolist()
+            dirty["tokens"] = True
             for i, trace in enumerate(live):
-                cur_tokens[trace.batch_slot] = int(nt[i])
-                trace.output_tokens.append(int(nt[i]))
-                trace.token_confidences.append(float(conf[i]))
+                cur_tokens[trace.batch_slot] = nt[i]
+                trace.output_tokens.append(nt[i])
+                trace.token_confidences.append(conf[i])
                 by_req[trace.request_id].note_first_token()
 
         def try_admit(budget: _TokenBudget) -> bool:
@@ -934,9 +1039,11 @@ class Engine:
                         break
                     if ok is False:
                         continue
-                    # the admitted trace decodes THIS tick: charge its
-                    # decode token so a tick never exceeds the budget
-                    if not budget.can(1, force=not running and not wave):
+                    # the admitted trace decodes THIS tick — up to a
+                    # full horizon of tokens: charge them pessimistically
+                    # so a tick never exceeds the budget
+                    if not budget.can(K_cfg,
+                                      force=not running and not wave):
                         skipped.add(st.request_id)
                         continue
                     # headroom for this trace's first private block (the
@@ -949,13 +1056,13 @@ class Engine:
                                                   at_admission=True):
                             break
                         continue
-                    budget.spend(1)
+                    budget.spend(K_cfg)
                     admit_shared(trace, st, wave)
                 else:
                     ids_len = (len(trace.prompt_tokens)
                                + len(trace.output_tokens))
-                    # prefill cost + the decode token of this same tick
-                    if not budget.can(ids_len + 1, force=not running):
+                    # prefill cost + this tick's decode horizon
+                    if not budget.can(ids_len + K_cfg, force=not running):
                         skipped.add(trace.request_id)
                         continue
                     need = mgr.blocks_for_tokens(min(ids_len + 1, cap))
@@ -970,7 +1077,7 @@ class Engine:
                         if not mgr.can_allocate(need):
                             break
                         continue
-                    budget.spend(ids_len + 1)
+                    budget.spend(ids_len + K_cfg)
                     admit_private(trace, st)
             flush_first_tokens(wave)
             return advanced or bool(wave)
@@ -995,9 +1102,12 @@ class Engine:
                 if not st.done():
                     st.policy.observe_pressure(pressure)
 
+            # decode may emit up to decode_horizon tokens per running
+            # trace this tick; charge the budget pessimistically so a
+            # tick can never exceed it
             budget = _TokenBudget(
                 None if ecfg.max_tokens_per_step is None
-                else max(ecfg.max_tokens_per_step - len(running), 0))
+                else max(ecfg.max_tokens_per_step - len(running) * K_cfg, 0))
             progressed = try_admit(budget)
             if not running:
                 if not (waiting or jobs or pending):
@@ -1024,12 +1134,15 @@ class Engine:
             # blocks
             progress = True
             for trace in list(running):
-                slot = trace.batch_slot
-                pos = int(positions[slot])
-                widx = pos % cap  # decode writes at positions % window
-                bidx = widx // bs
-                if (bidx < len(trace.blocks)
-                        and not mgr.is_shared(trace.blocks[bidx])):
+                if trace.status != TraceStatus.RUNNING:
+                    # released (pruned/preempted) as an earlier trace's
+                    # memory-full victim within this very loop: it no
+                    # longer needs a write block, and raising pressure
+                    # on its behalf would evict a live trace for nothing
+                    continue
+                pos = int(positions[trace.batch_slot])
+                bidx = (pos % cap) // bs  # writes land at pos % window
+                if owns_write_block(trace, bidx):
                     continue
                 while not mgr.can_allocate(1):
                     if not handle_memory_full(trace, trace.request_id):
@@ -1039,35 +1152,66 @@ class Engine:
                         break  # the needy trace itself was pruned/preempted
                 if trace.status != TraceStatus.RUNNING or not progress:
                     continue
-                blk = mgr.allocate(1)
-                note_peak()
-                if bidx < len(trace.blocks):
-                    # COW: first write into a shared prompt block
-                    old = trace.blocks[bidx]
-                    cache = self._copy_block(cache, old, blk[0])
-                    mgr.free([old])
-                    trace.blocks[bidx] = blk[0]
-                else:
-                    trace.blocks.extend(blk)
-                block_tables[slot, bidx] = blk[0]
+                claim_write_block(trace, bidx)
             if not running:
                 continue
 
-            # one fixed-shape batched decode step
+            # --------------------------------------------------------
+            # decode horizon: how many tokens may this tick fuse?
+            # --------------------------------------------------------
+            K_tick = K_cfg
+            if K_cfg > 1 and waiting:
+                # Admission pressure: count the blocks a full-horizon
+                # frontier would actually ALLOCATE (most ticks the write
+                # block has unwritten slots left and the answer is 0 —
+                # the horizon is free). If extending would drain the
+                # free list to the last block, pre-allocation could
+                # starve waiting admissions and shift memory-triggered
+                # pruning decisions away from their horizon=1 points:
+                # fall back to a single-token tick until the contention
+                # clears.
+                needed_new = 0
+                for trace in running:
+                    needed_new += len(
+                        {bidx for _, bidx in frontier_walk(trace, K_cfg)
+                         if not owns_write_block(trace, bidx)})
+                if needed_new and not mgr.can_allocate(needed_new + 1):
+                    self.horizon_fallbacks += 1
+                    K_tick = 1
+
+            limits = np.zeros((B,), np.int32)
+            for trace in running:
+                limits[trace.batch_slot] = (
+                    1 if K_tick == 1 else extend_frontier(trace, K_tick))
+
+            # one fixed-shape fused decode call: K_tick iterations of
+            # decode + on-device sampling + step-boundary score capture
             n_by_req: Dict[int, int] = {}
             for t in running:
                 n_by_req[t.request_id] = n_by_req.get(t.request_id, 0) + 1
             t_dec = time.perf_counter()
-            self._rng, k = jax.random.split(self._rng)
-            new_tokens, conf, scores, cache = self._decode(
-                self.params, cache,
-                jnp.asarray(cur_tokens[:, None]),
-                jnp.asarray(positions),
-                jnp.asarray(block_tables), k,
-                self.scorer_params)
-            new_tokens = np.asarray(new_tokens)
-            conf = np.asarray(conf)
-            scores = np.asarray(scores)
+            for name, arr in (("tokens", cur_tokens),
+                              ("positions", positions),
+                              ("block_tables", block_tables)):
+                if dirty[name] or dev[name] is None:
+                    dev[name] = jnp.asarray(arr)
+                    dirty[name] = False
+            decode_fn = (self._decode if K_tick == K_cfg
+                         else self._decode_single)
+            (toks_d, confs_d, scores_d, tv_d, sv_d, fin_tok, fin_pos,
+             cache, self._rng) = decode_fn(
+                self.params, cache, dev["tokens"], dev["positions"],
+                jnp.asarray(limits), dev["block_tables"],
+                self._rng, self.scorer_params)
+            # single host sync per tick; .tolist() batches the per-trace
+            # float()/int() conversions of the old per-token loop
+            toks_h, confs_h, scores_h, tv_h, sv_h, ft_h, fp_h = (
+                x.tolist() for x in jax.device_get(
+                    (toks_d, confs_d, scores_d, tv_d, sv_d,
+                     fin_tok, fin_pos)))
+            dev["tokens"], dev["positions"] = fin_tok, fin_pos
+            cur_tokens[:] = ft_h
+            positions[:] = fp_h
             dt = time.perf_counter() - t_dec
             tot = sum(n_by_req.values())
             for rid, n in n_by_req.items():
@@ -1076,17 +1220,29 @@ class Engine:
             for trace in list(running):
                 st = by_req[trace.request_id]
                 slot = trace.batch_slot
-                prev_token = int(cur_tokens[slot])
-                nt = int(new_tokens[slot])
-                # the score is for the hidden state of prev_token (the one
-                # just consumed by this step); boundary => step end
-                if prev_token == tok.step_id and st.policy.uses_scorer:
-                    trace.add_step_score(float(scores[slot]))
-                trace.output_tokens.append(nt)
-                trace.token_confidences.append(float(conf[slot]))
-                positions[slot] += 1
-                cur_tokens[slot] = nt
-                if nt == tok.eos_id or trace.num_tokens >= ecfg.max_new_tokens:
+                valid_row = tv_h[slot]
+                n_emit = 0
+                for v in valid_row:
+                    if not v:
+                        break
+                    n_emit += 1
+                # scores belong to the hidden states of the iteration
+                # INPUT tokens; score_valid marks the step boundaries
+                # (input token == step_id) inside the emitted prefix
+                if st.policy.uses_scorer:
+                    burst_scores = [scores_h[slot][i]
+                                    for i in range(n_emit) if sv_h[slot][i]]
+                    if burst_scores:
+                        trace.add_step_scores(burst_scores)
+                else:
+                    burst_scores = []
+                burst_toks = toks_h[slot][:n_emit]
+                burst_confs = confs_h[slot][:n_emit]
+                trace.extend_output(burst_toks, burst_confs)
+                st.policy.observe_decode_burst(trace, burst_toks,
+                                               burst_confs, burst_scores)
+                if n_emit and (burst_toks[-1] == tok.eos_id
+                               or trace.num_tokens >= ecfg.max_new_tokens):
                     finish(trace)
 
             # signal-triggered termination (DeepConf / Slim-SC / STEP

@@ -1,4 +1,12 @@
-"""Token sampling (temperature / top-k / top-p) + confidence extraction."""
+"""Token sampling (temperature / top-k / top-p) + confidence extraction.
+
+``sample_logits`` is the scan-compatible core: a plain traceable function
+(no ``jax.jit`` wrapper, no device sync) so the fused multi-token decode
+horizon can call it inside a ``lax.scan`` body once per iteration.
+``sample_tokens`` is the jitted convenience wrapper the host-side code
+paths (prefill first-token sampling) keep using; both produce bit-identical
+samples for the same key.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -16,17 +24,30 @@ class SamplingParams:
     max_new_tokens: int = 160
 
 
-@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
-def sample_tokens(rng: jax.Array, logits: jax.Array, *,
+def sample_logits(rng: jax.Array, logits: jax.Array, *,
                   temperature: float = 0.8, top_k: int = 20,
                   top_p: float = 0.95):
-    """logits [B, V] -> (tokens [B], confidence [B]).
+    """logits [B, V] -> (tokens [B], confidence [B]); scan-compatible.
 
     Confidence = probability the model assigned to the sampled token under
     the UNtempered distribution (the DeepConf-style signal).
+    ``temperature`` / ``top_k`` / ``top_p`` must be Python scalars (they
+    select the lowered graph, not traced values).
+
+    ``temperature <= 0`` is exact greedy: a deterministic argmax that
+    ignores the key entirely. (Scaling logits by 1/eps and sampling
+    would break exact logit ties by the per-call gumbel noise, making
+    "greedy" outputs depend on how many keys the caller consumed — e.g.
+    on the decode horizon.)
     """
     logits_f = logits.astype(jnp.float32)
     base_logp = jax.nn.log_softmax(logits_f, axis=-1)
+
+    if temperature <= 0.0:
+        tokens = jnp.argmax(logits_f, axis=-1)
+        conf = jnp.exp(jnp.take_along_axis(base_logp, tokens[:, None],
+                                           axis=1))[:, 0]
+        return tokens.astype(jnp.int32), conf
 
     scaled = logits_f / jnp.maximum(temperature, 1e-6)
     if top_k > 0 and top_k < logits.shape[-1]:
@@ -45,3 +66,12 @@ def sample_tokens(rng: jax.Array, logits: jax.Array, *,
     conf = jnp.exp(jnp.take_along_axis(base_logp, tokens[:, None],
                                        axis=1))[:, 0]
     return tokens.astype(jnp.int32), conf
+
+
+@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
+def sample_tokens(rng: jax.Array, logits: jax.Array, *,
+                  temperature: float = 0.8, top_k: int = 20,
+                  top_p: float = 0.95):
+    """Jitted wrapper over ``sample_logits`` (host-side call sites)."""
+    return sample_logits(rng, logits, temperature=temperature,
+                         top_k=top_k, top_p=top_p)
