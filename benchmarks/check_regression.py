@@ -53,6 +53,17 @@ RULES = {
         ("speedup_4x", "min_ratio", 0.3),
         ("horizons.8.tok_per_s", "min_ratio", 0.2),
     ],
+    "sharded_serving": [
+        # the sharded-engine contract: token-identical generations on
+        # the (data=2, model=2) mesh, full-length runs on both engines
+        ("outputs_identical", "equal", None),
+        ("single.tokens", "equal", None),
+        ("sharded.tokens", "equal", None),
+        # throughput on SIMULATED devices measures collective overhead,
+        # not scaling — loose collapse guards only
+        ("sharded.tok_per_s", "min_ratio", 0.2),
+        ("sharded_over_single_x", "min_ratio", 0.25),
+    ],
 }
 
 
@@ -62,7 +73,24 @@ def _get(d: dict, path: str):
     return d
 
 
-def check(new_path: str, ref_path: str) -> list:
+def _fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return repr(v)
+    if isinstance(v, int):
+        return str(v)
+    return f"{v:.4g}"
+
+
+def _rule_label(kind: str, bound) -> str:
+    return {"equal": "==", "max_ratio": f"<= ref x{bound}",
+            "min_ratio": f">= ref x{bound}", "min_frac": f">= ref x{bound}",
+            "min_abs": f">= {bound}"}[kind]
+
+
+def check(new_path: str, ref_path: str):
+    """Returns (problems, rows): failure strings plus one comparison row
+    per rule — (benchmark, metric, new, ref, rule, ok) — for the
+    markdown summary table."""
     with open(new_path) as f:
         new = json.load(f)
     with open(ref_path) as f:
@@ -70,53 +98,89 @@ def check(new_path: str, ref_path: str) -> list:
     bench = new.get("benchmark")
     rules = RULES.get(bench)
     if rules is None:
-        return [f"{new_path}: unknown benchmark {bench!r}"]
+        return [f"{new_path}: unknown benchmark {bench!r}"], []
     problems = []
+    rows = []
     for path, kind, bound in rules:
         try:
             nv, rv = _get(new, path), _get(ref, path)
         except KeyError as e:
             problems.append(f"{bench}.{path}: missing key {e}")
+            rows.append((bench, path, "missing", "missing",
+                         _rule_label(kind, bound), False))
             continue
+        problem = None
         if kind == "equal" and nv != rv:
-            problems.append(f"{bench}.{path}: {nv!r} != reference {rv!r}")
+            problem = f"{bench}.{path}: {nv!r} != reference {rv!r}"
         elif kind == "max_ratio" and rv > 0 and nv > rv * bound:
-            problems.append(
-                f"{bench}.{path}: {nv:.4g} exceeds reference "
-                f"{rv:.4g} x{bound} (regression)")
+            problem = (f"{bench}.{path}: {nv:.4g} exceeds reference "
+                       f"{rv:.4g} x{bound} (regression)")
         elif kind == "min_ratio" and nv < rv * bound:
-            problems.append(
-                f"{bench}.{path}: {nv:.4g} below reference "
-                f"{rv:.4g} x{bound} (regression)")
+            problem = (f"{bench}.{path}: {nv:.4g} below reference "
+                       f"{rv:.4g} x{bound} (regression)")
         elif kind == "min_frac" and nv < rv * bound:
-            problems.append(
-                f"{bench}.{path}: {nv:.4g} below reference "
-                f"{rv:.4g} x{bound}")
+            problem = (f"{bench}.{path}: {nv:.4g} below reference "
+                       f"{rv:.4g} x{bound}")
         elif kind == "min_abs" and nv < bound:
-            problems.append(
-                f"{bench}.{path}: {nv:.4g} below absolute floor "
-                f"{bound} (regression)")
-    return problems
+            problem = (f"{bench}.{path}: {nv:.4g} below absolute floor "
+                       f"{bound} (regression)")
+        if problem is not None:
+            problems.append(problem)
+        rows.append((bench, path, _fmt(nv), _fmt(rv),
+                     _rule_label(kind, bound), problem is None))
+    return problems, rows
+
+
+def render_markdown(rows, failures) -> str:
+    """Current-vs-reference comparison as a GitHub markdown table (the
+    bench-smoke job appends it to $GITHUB_STEP_SUMMARY so regressions
+    are readable without downloading artifacts)."""
+    lines = ["## Benchmark trajectory (current vs `benchmarks/reference/`)",
+             "",
+             "| benchmark | metric | current | reference | gate | status |",
+             "|---|---|---:|---:|---|---|"]
+    for bench, path, nv, rv, rule, ok in rows:
+        status = "ok" if ok else "**REGRESSION**"
+        lines.append(f"| {bench} | `{path}` | {nv} | {rv} | {rule} "
+                     f"| {status} |")
+    lines.append("")
+    lines.append("All gates passed." if not failures
+                 else f"**{len(failures)} gate(s) failed.**")
+    lines.append("")
+    return "\n".join(lines)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("artifacts", nargs="+", help="BENCH_*.json files")
     ap.add_argument("--ref-dir", default=REF_DIR)
+    ap.add_argument("--summary", default=os.environ.get(
+        "GITHUB_STEP_SUMMARY"),
+        help="append the markdown comparison table to this file "
+             "(defaults to $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args()
     failures = []
+    all_rows = []
     for art in args.artifacts:
         ref = os.path.join(args.ref_dir, os.path.basename(art))
         if not os.path.exists(ref):
-            failures.append(f"{art}: no reference at {ref} "
-                            f"(commit one to start the trajectory)")
+            msg = (f"{art}: no reference at {ref} "
+                   f"(commit one to start the trajectory)")
+            print(f"[REGRESSION] {msg}")
+            failures.append(msg)
+            all_rows.append((os.path.basename(art), "(reference file)",
+                             "present", "MISSING", "exists", False))
             continue
-        probs = check(art, ref)
+        probs, rows = check(art, ref)
+        all_rows.extend(rows)
         tag = "OK" if not probs else "REGRESSION"
         print(f"[{tag}] {os.path.basename(art)} vs {ref}")
         for p in probs:
             print(f"    {p}")
         failures.extend(probs)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(render_markdown(all_rows, failures))
     return 1 if failures else 0
 
 

@@ -55,6 +55,24 @@ def build_artifacts(verbose: bool = True) -> None:
               f"fallback={info['fallback_rendered']}")
 
 
+def bench_requests(tok, n_requests: int, n_traces: int, seed: int,
+                   n_steps=(8, 12), method: str = "sc") -> list:
+    """The shared synthetic request workload of the engine perf
+    benchmarks (decode_throughput, sharded_serving): deterministic
+    problems rendered to prompts, one fresh policy per request."""
+    from repro.core.pruning import make_policy
+    from repro.data.arithmetic import make_prompt
+    from repro.serving import Request, make_problems
+
+    problems = make_problems(n_requests, seed=seed, n_steps=n_steps)
+    return [
+        Request(request_id=i,
+                prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
+                n_traces=n_traces, policy=make_policy(method))
+        for i, p in enumerate(problems)
+    ]
+
+
 def load_artifacts() -> Tuple[dict, dict, dict]:
     """Returns (params, scorer_params, cfg). Builds on first use."""
     cfg = serving_config()

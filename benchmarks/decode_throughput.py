@@ -33,14 +33,13 @@ import time
 
 import jax
 
+from benchmarks.common import bench_requests
 from repro.configs.registry import serving_config
 from repro.core.pruning import make_policy
 from repro.core.trace import TraceStatus
-from repro.data.arithmetic import make_prompt
 from repro.data.tokenizer import get_tokenizer
 from repro.models.init import init_params
-from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
-                           make_problems)
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 HORIZONS = (1, 4, 8)
 N_REQUESTS = 2
@@ -67,13 +66,7 @@ def bench_config():
 
 
 def _requests(tok):
-    problems = make_problems(N_REQUESTS, seed=SEED, n_steps=(8, 12))
-    return [
-        Request(request_id=i,
-                prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
-                n_traces=N_TRACES, policy=make_policy("sc"))
-        for i, p in enumerate(problems)
-    ]
+    return bench_requests(tok, N_REQUESTS, N_TRACES, seed=SEED)
 
 
 def run(verbose: bool = False) -> dict:

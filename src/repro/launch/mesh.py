@@ -1,4 +1,4 @@
-"""Production meshes (TPU v5e).
+"""Production meshes (TPU v5e) and host meshes (CPU, simulated devices).
 
 Single pod: 256 chips as (data=16, model=16).
 Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the "pod"
@@ -6,10 +6,17 @@ axis carries only batch (data-parallel) sharding — gradients all-reduce
 over ("pod", "data") — so the slow inter-pod DCI links never see tensor-
 parallel collectives.
 
+Host meshes adapt to however many host devices exist —
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` simulates an
+N-device CPU mesh, which is what the multi-device CI lane and the
+sharded-serving tests run on.
+
 Defined as functions (never module-level constants) so importing this
 module touches no jax device state.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import jax
 
@@ -20,9 +27,56 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """1-device mesh (CPU smoke paths) with the same axis names."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def resolve_host_mesh_shape(data: Optional[int] = None,
+                            model: Optional[int] = None,
+                            device_count: Optional[int] = None
+                            ) -> Tuple[int, int]:
+    """Resolve a ``(data, model)`` host-mesh shape against the available
+    devices. ``None`` axes adapt: a missing ``model`` (or both) soaks up
+    whatever ``data`` leaves, a missing ``data`` fills
+    ``devices / model``. Requested sizes are validated with a clear
+    error instead of jax's opaque "devices cannot be reshaped".
+    """
+    n = jax.device_count() if device_count is None else device_count
+
+    def _check(name: str, val: int) -> None:
+        if val < 1:
+            raise ValueError(f"mesh axis {name!r} must be >= 1, got {val}")
+        if n % val != 0 or val > n:
+            raise ValueError(
+                f"mesh axis {name}={val} does not divide the {n} available "
+                f"device(s); run with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=<N> to simulate "
+                f"more CPU devices")
+
+    if data is None and model is None:
+        data, model = n, 1
+    elif data is None:
+        _check("model", model)
+        data = n // model
+    elif model is None:
+        _check("data", data)
+        model = n // data
+    _check("data", data)
+    _check("model", model)
+    if data * model != n:
+        raise ValueError(
+            f"mesh (data={data}, model={model}) needs {data * model} "
+            f"devices but {n} are available")
+    return data, model
+
+
+def make_host_mesh(data: Optional[int] = None, model: Optional[int] = None):
+    """Host-device mesh with the production axis names.
+
+    With no arguments this adapts to ``jax.device_count()`` (all devices
+    on the data axis) — the old hard-coded ``(1, 1)`` only ever matched
+    a single-device process. Explicit sizes are validated against the
+    available devices; ``None`` axes are inferred (see
+    ``resolve_host_mesh_shape``).
+    """
+    data, model = resolve_host_mesh_shape(data, model)
+    return jax.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

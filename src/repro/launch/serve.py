@@ -9,14 +9,41 @@ stream per-request completions, and print the TTFT/TPOT/e2e summary:
 
     python -m repro.launch.serve --method step --batched \
         --arrival-rate 2.0 --chunk 32 --max-tokens-per-step 64 --stream
+
+Sharded serving: run the engine over a (data, model) device mesh.
+``--mesh 2,2`` asks for data=2, model=2; ``--mesh auto`` adapts to
+``jax.device_count()``. Simulate devices on a CPU host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.launch.serve --method step --mesh 2,2
 """
 from __future__ import annotations
 
 import argparse
+from typing import Optional
 
 from repro.serving import (EngineConfig, SamplingParams, evaluate_method,
                            evaluate_method_batched, make_problems,
                            poisson_arrivals)
+
+
+def parse_mesh(spec: Optional[str]):
+    """``None``/"none" -> no mesh; "auto" -> all devices on data;
+    "D,M" -> explicit (data=D, model=M), validated against the device
+    count with a clear error."""
+    if spec is None or spec.lower() == "none":
+        return None
+    from repro.launch.mesh import make_host_mesh
+    if spec.lower() == "auto":
+        return make_host_mesh()
+    try:
+        data_s, model_s = spec.split(",")
+        data, model = int(data_s), int(model_s)
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'auto' or 'DATA,MODEL' "
+                         f"(e.g. 2,2), got {spec!r}")
+    return make_host_mesh(data, model)
 
 
 def main():
@@ -48,7 +75,12 @@ def main():
                          "jitted device call (1 = one token per tick)")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve over a device mesh: 'auto' (all devices "
+                         "on the data axis) or explicit sizes like "
+                         "'2,2'; default: single-device engine")
     args = ap.parse_args()
+    mesh = parse_mesh(args.mesh)
 
     from benchmarks.common import load_artifacts
     params, scorer, cfg = load_artifacts()
@@ -81,12 +113,12 @@ def main():
         res = evaluate_method_batched(
             args.method, params, cfg, problems, args.traces, ecfg,
             scorer_params=scorer, policy_kwargs=pkw,
-            arrival_times=arrivals, on_result=on_result,
+            arrival_times=arrivals, on_result=on_result, mesh=mesh,
             verbose=not args.stream)
     else:
         res = evaluate_method(args.method, params, cfg, problems,
                               args.traces, ecfg, scorer_params=scorer,
-                              policy_kwargs=pkw, verbose=True)
+                              policy_kwargs=pkw, mesh=mesh, verbose=True)
 
     print(f"\n[{args.method}] acc={res.accuracy:.2f} "
           f"tokens={res.avg_tokens:.0f} latency={res.avg_latency_s:.2f}s "

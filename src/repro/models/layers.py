@@ -46,11 +46,28 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 # feed-forward
 # ---------------------------------------------------------------------------
 
-def swiglu(p: dict, x: jax.Array) -> jax.Array:
-    """p: {w_gate [D,F], w_up [D,F], w_down [F,D]}"""
+def swiglu(p: dict, x: jax.Array, act_spec=None) -> jax.Array:
+    """p: {w_gate [D,F], w_up [D,F], w_down [F,D]}
+
+    ``act_spec`` (serving mesh): the column-parallel gate/up outputs are
+    model-sharded on F, and contracting that sharded F against the
+    replicated ``w_down`` would make GSPMD partial-sum across shards —
+    a float reduction whose rounding differs from the single-device
+    matmul. Constraining the activation un-sharded on F first turns the
+    collective into an exact all-gather and keeps the contraction
+    bit-identical to one device. The input is pinned the same way: an
+    unconstrained norm output feeding the column-parallel gate/up
+    matmuls could get D-sharded by GSPMD, partial-summing THEIR
+    contraction instead.
+    """
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     g = x @ p["w_gate"]
     u = x @ p["w_up"]
-    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ p["w_down"]
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    if act_spec is not None:
+        act = jax.lax.with_sharding_constraint(act, act_spec)
+    return act @ p["w_down"]
 
 
 # ---------------------------------------------------------------------------
@@ -131,7 +148,8 @@ def gqa_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
                        positions: jax.Array,
                        window: Optional[int] = None,
                        return_kv: bool = False,
-                       use_kernel: bool = False):
+                       use_kernel: bool = False,
+                       act_spec=None):
     """Full-sequence GQA attention.
 
     p: {wq [D, H*hd], wk [D, KVH*hd], wv [D, KVH*hd], wo [H*hd, D],
@@ -140,6 +158,8 @@ def gqa_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
     """
     B, S, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if act_spec is not None:  # exact TP: see swiglu
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     q = (x @ p["wq"]).reshape(B, S, H, hd)
     k = (x @ p["wk"]).reshape(B, S, KVH, hd)
     v = (x @ p["wv"]).reshape(B, S, KVH, hd)
@@ -181,6 +201,8 @@ def gqa_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
         out = out.reshape(B, S, H * hd)
+    if act_spec is not None:  # exact TP: gather heads before the wo
+        out = jax.lax.with_sharding_constraint(out, act_spec)  # contraction
     out = out @ p["wo"]
     if return_kv:
         return out, (k, v)
@@ -248,6 +270,9 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     """
     B, _, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    act_spec = cache.get("act_spec")
+    if act_spec is not None:  # exact TP: see swiglu
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     q = (x @ p["wq"]).reshape(B, H, hd)
     k = (x @ p["wk"]).reshape(B, KVH, hd)
     v = (x @ p["wv"]).reshape(B, KVH, hd)
@@ -263,12 +288,23 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     slot = jnp.where(window_len > 0, positions % window_len, positions)
     pool_k = paged_kv_update(cache["k_pool"], cache["block_tables"], slot, k)
     pool_v = paged_kv_update(cache["v_pool"], cache["block_tables"], slot, v)
+    pool_spec = cache.get("pool_spec")
+    if pool_spec is not None:
+        # pin the updated per-layer pools to the serving-mesh layout so
+        # the layer scan's stacked outputs keep the canonical sharding
+        # (otherwise GSPMD may re-layout the dominant cache bytes around
+        # the scatter and drag an all-gather into every tick)
+        pool_k = jax.lax.with_sharding_constraint(pool_k, pool_spec)
+        pool_v = jax.lax.with_sharding_constraint(pool_v, pool_spec)
     new_lens = jnp.minimum(positions + 1, window_len) if window_len > 0 \
         else positions + 1
     out = paged_attention_decode(
         pool_k, pool_v, q, cache["block_tables"], new_lens,
         scale=1.0 / math.sqrt(hd), use_kernel=cache.get("use_kernel", False))
-    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    out = out.reshape(B, 1, H * hd)
+    if act_spec is not None:  # exact TP (see swiglu): gather heads first
+        out = jax.lax.with_sharding_constraint(out, act_spec)
+    out = out @ p["wo"]
     return out, (pool_k, pool_v)
 
 
@@ -276,7 +312,8 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
                                 positions: jax.Array, valid: jax.Array,
                                 k_pool: jax.Array, v_pool: jax.Array,
                                 block_tables: jax.Array, window_len: int,
-                                window: Optional[int] = None) -> tuple:
+                                window: Optional[int] = None,
+                                pool_spec=None, act_spec=None) -> tuple:
     """Prefill one chunk of a prompt against the paged KV cache.
 
     The continuous-batching engine splits long prompts into fixed-size
@@ -298,6 +335,8 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     bs = k_pool.shape[1]
     bp = block_tables.shape[1]
+    if act_spec is not None:  # exact TP: see swiglu
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     q = (x @ p["wq"]).reshape(B, C, H, hd)
     k = (x @ p["wk"]).reshape(B, C, KVH, hd)
     v = (x @ p["wv"]).reshape(B, C, KVH, hd)
@@ -316,6 +355,9 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     offs = slot % bs
     new_k_pool = k_pool.at[block_ids, offs].set(k)
     new_v_pool = v_pool.at[block_ids, offs].set(v)
+    if pool_spec is not None:  # serving mesh: keep the pool layout pinned
+        new_k_pool = jax.lax.with_sharding_constraint(new_k_pool, pool_spec)
+        new_v_pool = jax.lax.with_sharding_constraint(new_v_pool, pool_spec)
 
     # keys/values = [pooled prefix (earlier chunks) ++ exact own chunk].
     # The pool side is masked to positions strictly before this chunk, so
@@ -349,7 +391,10 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vals)
-    out = out.reshape(B, C, H * hd) @ p["wo"]
+    out = out.reshape(B, C, H * hd)
+    if act_spec is not None:  # exact TP (see swiglu): gather heads first
+        out = jax.lax.with_sharding_constraint(out, act_spec)
+    out = out @ p["wo"]
     return out, new_k_pool, new_v_pool
 
 
@@ -488,7 +533,8 @@ def cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
 # ---------------------------------------------------------------------------
 
 def mla_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
-                       positions: jax.Array, return_kv: bool = False):
+                       positions: jax.Array, return_kv: bool = False,
+                       act_spec=None):
     """Full-sequence MLA (train / prefill).
 
     p: {wq_a [D, q_lora], wq_b [q_lora, H*(nope+rope)],
@@ -499,6 +545,8 @@ def mla_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
     B, S, D = x.shape
     H = cfg.num_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if act_spec is not None:  # exact TP: see swiglu
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     q_lat = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
     q = (q_lat @ p["wq_b"]).reshape(B, S, H, nd + rd)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
@@ -537,6 +585,8 @@ def mla_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
         scores = jnp.where(mask[None, None], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(B, S, H * vd)
+    if act_spec is not None:  # exact TP (see swiglu): gather heads first
+        out = jax.lax.with_sharding_constraint(out, act_spec)
     out = out @ p["wo"]
     if return_kv:
         # paged-cache entry = [compressed latent | roped shared key]
@@ -561,6 +611,9 @@ def mla_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     L = cfg.kv_lora_rank
 
+    act_spec = cache.get("act_spec")
+    if act_spec is not None:  # exact TP: see swiglu
+        x = jax.lax.with_sharding_constraint(x, act_spec)
     q_lat = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
     q = (q_lat @ p["wq_b"]).reshape(B, H, nd + rd)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
@@ -578,6 +631,8 @@ def mla_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     pool = paged_kv_update(cache["kv_pool"][:, :, None, :],
                            cache["block_tables"], slot,
                            new_entry[:, None, :])[:, :, 0, :]
+    if cache.get("pool_spec") is not None:
+        pool = jax.lax.with_sharding_constraint(pool, cache["pool_spec"])
     new_lens = jnp.minimum(positions + 1, window_len) if window_len > 0 \
         else positions + 1
 
@@ -600,6 +655,8 @@ def mla_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_seq)  # [B,H,L]
     wv_b = p["wv_b"].reshape(L, H, vd)
     out = jnp.einsum("bhl,lhd->bhd", o_lat, wv_b).reshape(B, 1, H * vd)
+    if act_spec is not None:  # exact TP (see swiglu): gather heads first
+        out = jax.lax.with_sharding_constraint(out, act_spec)
     return out @ p["wo"], pool
 
 

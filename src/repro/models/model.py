@@ -80,8 +80,14 @@ def forward_full(params: dict, cfg: ModelConfig, tokens: jax.Array,
                  return_kv: bool = False,
                  remat: bool = False,
                  act_spec=None,
-                 kv_specs=None) -> dict:
+                 kv_specs=None,
+                 tp_act_spec=None) -> dict:
     """Returns {logits, hidden, aux_loss[, kvs]}.
+
+    ``tp_act_spec`` (serving mesh prefill): the sharding the
+    attention/MLP activations are constrained to around their row
+    contractions, so the exactness-preserving tensor-parallel layout
+    never partial-sums (see ``layers.swiglu``).
 
     ``remat=True`` checkpoints each layer body (save only the residual
     stream per layer; recompute attention/ffn intermediates in backward) —
@@ -175,21 +181,25 @@ def forward_full(params: dict, cfg: ModelConfig, tokens: jax.Array,
             a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
             if cfg.use_mla and return_kv:
                 a, kv = L.mla_attention_full(lp["attn"], cfg, a_in, positions,
-                                             return_kv=True)
+                                             return_kv=True,
+                                             act_spec=tp_act_spec)
                 kv = _wsc_kv(kv_specs, "mla", kv)
             elif cfg.use_mla:
-                a = L.mla_attention_full(lp["attn"], cfg, a_in, positions)
+                a = L.mla_attention_full(lp["attn"], cfg, a_in, positions,
+                                         act_spec=tp_act_spec)
                 kv = None
             elif return_kv:
                 a, kv = L.gqa_attention_full(lp["attn"], cfg, a_in, positions,
                                              window=window, return_kv=True,
-                                             use_kernel=use_kernel)
+                                             use_kernel=use_kernel,
+                                             act_spec=tp_act_spec)
                 kv = (_wsc_kv(kv_specs, "kv", kv[0]),
                       _wsc_kv(kv_specs, "kv", kv[1]))
             else:
                 a = L.gqa_attention_full(lp["attn"], cfg, a_in, positions,
                                          window=window,
-                                         use_kernel=use_kernel)
+                                         use_kernel=use_kernel,
+                                         act_spec=tp_act_spec)
                 kv = None
             h = h + a
             if cfg.is_encoder_decoder:
@@ -206,7 +216,7 @@ def forward_full(params: dict, cfg: ModelConfig, tokens: jax.Array,
                     else kv_specs.get("moe_experts"))
                 aux = aux + aux_l
             else:
-                m = L.swiglu(lp["mlp"], m_in)
+                m = L.swiglu(lp["mlp"], m_in, act_spec=tp_act_spec)
             return (wsc(h + m), aux), kv
 
         if remat:
@@ -228,15 +238,36 @@ def forward_full(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 positions: jax.Array, cache: dict, window_len: int,
-                use_kernel: bool = False) -> dict:
+                use_kernel: bool = False, shard_specs=None) -> dict:
     """tokens [B,1]; positions [B]; cache per kv_cache_specs.
 
     window_len: static cache capacity in tokens (rolling buffer when the
     sequence outgrows it). Returns {logits [B,V], hidden [B,D], cache}.
+
+    ``shard_specs`` (launch/shardings.serving_step_shardings) makes the
+    step mesh-aware: per-layer pool updates are pinned to the serving
+    cache layout and the last hidden state is constrained to the
+    data-sharded lane layout, so a step scorer consuming it
+    (``multi_decode_step``'s ``score_fn``) runs shard-local — no
+    cross-device gather per scored token.
     """
     B = tokens.shape[0]
     h = _embed(params, cfg, tokens)  # [B,1,D]
     new_cache = dict(cache)
+    layer_pool = {} if shard_specs is None else shard_specs["layer_pool"]
+    act = None if shard_specs is None else shard_specs["act"]
+
+    def wsc_h(x):
+        # pin the residual stream AND the norm outputs feeding the
+        # column-parallel projections to the lane layout: left
+        # unconstrained, GSPMD may shard them on D inside the layer
+        # scan, turning the QKV/MLP contractions over D into
+        # cross-shard partial sums (inexact rounding)
+        if act is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act)
+
+    h = wsc_h(h)
 
     if cfg.arch_type == "ssm":
         def body(h, xs):
@@ -268,7 +299,9 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 sa["attn"], cfg, a_in, positions,
                 {"k_pool": k_pool, "v_pool": v_pool,
                  "block_tables": cache["block_tables"],
-                 "window_len": window_len, "use_kernel": use_kernel}, 0)
+                 "window_len": window_len, "use_kernel": use_kernel,
+                 "pool_spec": layer_pool.get("k_pool"),
+                 "act_spec": act}, 0)
             h = h + a
             h = h + L.swiglu(sa["mlp"], L.rms_norm(h, sa["ln2"], cfg.norm_eps))
             return h, (ns, ncv, nk, nv)
@@ -301,14 +334,18 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                     lp["attn"], cfg, a_in, positions,
                     {"kv_pool": kv_pool,
                      "block_tables": cache["block_tables"],
-                     "window_len": window_len})
+                     "window_len": window_len,
+                     "pool_spec": layer_pool.get("kv_pool"),
+                     "act_spec": act})
                 out_pools = (new_pool,)
             else:
                 a, (nk, nv) = L.gqa_attention_decode(
                     lp["attn"], cfg, a_in, positions,
                     {"k_pool": k_pool, "v_pool": v_pool,
                      "block_tables": cache["block_tables"],
-                     "window_len": window_len, "use_kernel": use_kernel}, 0)
+                     "window_len": window_len, "use_kernel": use_kernel,
+                     "pool_spec": layer_pool.get("k_pool"),
+                     "act_spec": act}, 0)
                 out_pools = (nk, nv)
             h = h + a
             if has_cross:
@@ -321,8 +358,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
             if cfg.uses_moe:
                 m, _ = L.moe_layer(lp["moe"], cfg, m_in)
             else:
-                m = L.swiglu(lp["mlp"], m_in)
-            return h + m, out_pools
+                m = L.swiglu(lp["mlp"], m_in, act_spec=act)
+            return wsc_h(h + m), out_pools
 
         if cfg.use_mla:
             xs = (params["layers"], cache["kv_pool"])
@@ -337,6 +374,9 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
             new_cache["k_pool"], new_cache["v_pool"] = out_pools
 
     hidden = L.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)  # [B,D]
+    if shard_specs is not None:
+        hidden = jax.lax.with_sharding_constraint(hidden,
+                                                  shard_specs["hidden"])
     logits = _logits(params, cfg, hidden)
     return {"logits": logits, "hidden": hidden, "cache": new_cache}
 
@@ -350,7 +390,7 @@ def multi_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                       *, window_len: int, horizon: int, rng_keys: jax.Array,
                       sample_fn, eos_id: int, step_id: int,
                       score_fn=None, scratch_block: int = 0,
-                      use_kernel: bool = False) -> dict:
+                      use_kernel: bool = False, shard_specs=None) -> dict:
     """Run ``horizon`` decode iterations inside one ``lax.scan``.
 
     The host consumes tokens/confidences/step-scores once per K tokens
@@ -395,11 +435,24 @@ def multi_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     emitted prefix per lane and ``score_valid`` the step-boundary subset.
     ``cache`` excludes ``block_tables`` (the in-scan copy is scratch-
     masked and not meaningful to the caller).
+
+    ``shard_specs`` (launch/shardings.serving_step_shardings) runs the
+    scan over a device mesh: the scan carry (pools, per-lane state,
+    block tables) is constrained to the serving layout every iteration
+    so the carry sharding is a stable fixpoint, and the per-iteration
+    step scorer consumes the data-sharded hidden state locally.
     """
     B = tokens.shape[0]
     active0 = limits > 0
     bt0 = jnp.where(active0[:, None], cache["block_tables"], scratch_block)
     pools = {k: v for k, v in cache.items() if k != "block_tables"}
+
+    def wsc(x, key):
+        if shard_specs is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, shard_specs[key])
+
+    bt0 = wsc(bt0, "table")
 
     def body(carry, xs):
         pools, ct, pos, active, bt = carry
@@ -407,22 +460,31 @@ def multi_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         c = dict(pools)
         c["block_tables"] = bt
         out = decode_step(params, cfg, ct[:, None], pos, c,
-                          window_len=window_len, use_kernel=use_kernel)
+                          window_len=window_len, use_kernel=use_kernel,
+                          shard_specs=shard_specs)
         nt, conf = sample_fn(key, out["logits"])
         if score_fn is not None:
             scores = score_fn(out["hidden"])
         else:
             scores = jnp.zeros((B,), jnp.float32)
+        scores = wsc(scores, "lane")
         token_valid = active
         # the hidden state belongs to the input token; boundary => the
         # previous token closed a reasoning step
         score_valid = active & (ct == step_id)
         nt = jnp.where(active, nt, ct)  # frozen lanes re-feed their token
-        new_active = active & (nt != eos_id) & (k + 1 < limits)
-        new_pos = pos + active.astype(pos.dtype)
-        new_bt = jnp.where(new_active[:, None], bt, scratch_block)
+        nt, conf = wsc(nt, "lane"), wsc(conf, "lane")
+        new_active = wsc(active & (nt != eos_id) & (k + 1 < limits), "lane")
+        new_pos = wsc(pos + active.astype(pos.dtype), "lane")
+        new_bt = wsc(jnp.where(new_active[:, None], bt, scratch_block),
+                     "table")
         new_pools = out["cache"]
         new_pools.pop("block_tables", None)
+        if shard_specs is not None:
+            new_pools = {
+                k_: jax.lax.with_sharding_constraint(
+                    v, shard_specs["pools"][k_])
+                for k_, v in new_pools.items()}
         return ((new_pools, nt, new_pos, new_active, new_bt),
                 (nt, conf, scores, token_valid, score_valid))
 
@@ -452,7 +514,7 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
 
 def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                        positions: jax.Array, valid: jax.Array, cache: dict,
-                       window_len: int) -> dict:
+                       window_len: int, shard_specs=None) -> dict:
     """Prefill one prompt chunk into the paged KV cache.
 
     tokens [B, C] (right-padded to the static chunk width); positions
@@ -462,23 +524,33 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     logits at the prompt's last valid position of the final chunk.
     """
     assert supports_chunked_prefill(cfg), cfg.arch_type
-    h = _embed(params, cfg, tokens)  # [B, C, D]
     new_cache = dict(cache)
     window = cfg.sliding_window
+    pool_spec = (None if shard_specs is None
+                 else shard_specs["layer_pool"].get("k_pool"))
+    act = None if shard_specs is None else shard_specs["prefill_act"]
+
+    def wsc_h(x):  # see decode_step: keep the residual carry pinned
+        if act is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act)
+
+    h = wsc_h(_embed(params, cfg, tokens))  # [B, C, D]
 
     def body(h, xs):
         lp, k_pool, v_pool = xs
         a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
         a, nk, nv = L.gqa_attention_prefill_chunk(
             lp["attn"], cfg, a_in, positions, valid, k_pool, v_pool,
-            cache["block_tables"], window_len, window=window)
+            cache["block_tables"], window_len, window=window,
+            pool_spec=pool_spec, act_spec=act)
         h = h + a
         m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
         if cfg.uses_moe:
             m, _ = L.moe_layer(lp["moe"], cfg, m_in)
         else:
-            m = L.swiglu(lp["mlp"], m_in)
-        return h + m, (nk, nv)
+            m = L.swiglu(lp["mlp"], m_in, act_spec=act)
+        return wsc_h(h + m), (nk, nv)
 
     h, (nk, nv) = jax.lax.scan(
         body, h, (params["layers"], cache["k_pool"], cache["v_pool"]))

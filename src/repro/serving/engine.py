@@ -287,16 +287,32 @@ class Engine:
     """Continuous-batching engine over a queue of requests, each fanning
     out into N parallel traces (the paper's setting: one problem, N=64
     traces — ``serve``; cross-request contention and online arrivals —
-    ``serve_batch``)."""
+    ``serve_batch``).
+
+    ``mesh`` (a ``("data", "model")`` jax mesh, e.g.
+    ``launch.mesh.make_host_mesh(2, 2)``) runs the device-resident side
+    over a device mesh: params tensor-parallel on "model"
+    (``launch/shardings.serving_param_specs`` — the exactness-preserving
+    layout whose only collectives are activation all-gathers), the
+    paged KV pool head-sharded on "model" with its block dim replicated
+    on "data" (``serving_cache_specs``), and the trace batch — tokens,
+    positions, block tables, per-lane outputs, step scores — sharded on
+    "data". Host-side scheduling (BlockManager, pruning, the queue) is
+    untouched: the allocator stays global, and every scheduling decision
+    consumes the same host-synced values, so a mesh engine is
+    token-identical to the single-device engine under a fixed RNG
+    (pinned in tests/test_sharded_engine.py)."""
 
     def __init__(self, params: dict, cfg: ModelConfig, ecfg: EngineConfig,
                  policy: PruningPolicy,
-                 scorer_params: Optional[dict] = None):
+                 scorer_params: Optional[dict] = None,
+                 mesh=None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.policy = policy
         self.scorer_params = scorer_params
+        self.mesh = mesh
         self.tok = get_tokenizer()
         bs = cfg.kv_block_size
         self.blocks_per_seq = -(-ecfg.capacity // bs)
@@ -307,7 +323,67 @@ class Engine:
         # ticks where admission pressure forced the horizon down to 1
         # (observable for tests/benchmarks)
         self.horizon_fallbacks = 0
+        self._ss = None  # serving step shardings (mesh engines only)
+        if mesh is not None:
+            self._place_on_mesh()
         self._build_steps()
+
+    def _place_on_mesh(self) -> None:
+        """Shard params/scorer onto the mesh and build the NamedSharding
+        bundle the jitted steps pin their in/out layouts to."""
+        from repro.launch.shardings import (serving_param_specs,
+                                            serving_prefill_kv_specs,
+                                            serving_step_shardings,
+                                            to_named)
+        mesh = self.mesh
+        for axis in ("data", "model"):
+            if axis not in mesh.axis_names:
+                raise ValueError(f"serving mesh needs a {axis!r} axis, "
+                                 f"got {mesh.axis_names}")
+        data_n = mesh.shape["data"]
+        if self.ecfg.max_batch % data_n != 0:
+            raise ValueError(
+                f"max_batch={self.ecfg.max_batch} must be a multiple of "
+                f"the mesh's data axis ({data_n}) so decode lanes shard "
+                f"evenly")
+        if self.cfg.arch_type in ("ssm", "hybrid") \
+                or self.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "mesh serving covers the dense paged-attention archs; "
+                "recurrent/enc-dec state would need a data-sharded "
+                "slot-state story first")
+        if self.cfg.use_mla or self.cfg.uses_moe:
+            # the bit-identity contract requires every sharded matmul's
+            # contractions to stay shard-local; MLA's low-rank norms
+            # (rms over a model-sharded lora dim) and the MoE
+            # router/dispatch reductions are not constrained yet
+            raise NotImplementedError(
+                "mesh serving's exactness layout does not cover "
+                "MLA/MoE yet; run these archs on a single device")
+        # Non-partitionable threefry (the jax<0.5 default) generates
+        # DIFFERENT random bits once the logits array is sharded, so
+        # temperature sampling on the mesh would silently diverge from
+        # the single-device engine. The partitionable implementation is
+        # sharding-invariant by construction. NOTE: this is a
+        # process-global flag — engines (and any other sampling code)
+        # created after this point consume partitionable key streams,
+        # which is exactly what makes a later single-device engine
+        # comparable to this one (tests pin mesh-vs-single token
+        # identity under it), but it does mean constructing a mesh
+        # engine changes fixed-seed streams for the rest of the process.
+        jax.config.update("jax_threefry_partitionable", True)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+        pspecs = serving_param_specs(self.cfg, mesh, shapes)
+        self.params = jax.device_put(self.params, to_named(mesh, pspecs))
+        self._ss = serving_step_shardings(self.cfg, mesh)
+        self._prefill_kv_specs = serving_prefill_kv_specs(self.cfg, mesh)
+        if self.scorer_params is not None:
+            # the scorer is a tiny MLP: replicate it so step-score
+            # capture is a shard-local matmul over the data-sharded
+            # hidden states (no gather per scored token)
+            self.scorer_params = jax.device_put(self.scorer_params,
+                                                self._ss["replicated"])
 
     # ------------------------------------------------------------------
     # jitted steps
@@ -316,6 +392,7 @@ class Engine:
         cfg, ecfg = self.cfg, self.ecfg
         has_scorer = self.scorer_params is not None
         sp = ecfg.sampling
+        ss = self._ss  # NamedSharding bundle (None on a 1-device engine)
 
         V = cfg.vocab_size  # mask vocab padding out of the sampler
         eos_id = self.tok.eos_id
@@ -323,13 +400,32 @@ class Engine:
 
         def sample_fn(key, logits):
             logits = logits.at[:, V:].set(-jnp.inf)
+            if ss is not None:
+                # The sampling math must never shard the vocab axis: the
+                # top-p cumsum and softmax denominators are float
+                # reductions whose cross-shard psum rounds differently
+                # than the single-device sum and flips boundary samples.
+                # Gathering the [B, Vp] logits (a few KB at decode
+                # widths) and sampling replicated reproduces the
+                # single-device sampler bit-for-bit.
+                logits = jax.lax.with_sharding_constraint(
+                    logits, ss["replicated"])
             return sample_logits(key, logits, temperature=sp.temperature,
                                  top_k=sp.top_k, top_p=sp.top_p)
 
         def make_decode(horizon):
             """Fused K-iteration decode; one jit instance per horizon."""
+            jit_kw = {}
+            if ss is not None:
+                # pin the round-trip layouts: per-lane [B, K] bursts and
+                # next-tick state stay data-sharded, pools keep the
+                # serving cache layout (donation then reuses the input
+                # pool buffers), the key stays replicated
+                t, lane = ss["table"], ss["lane"]
+                jit_kw["out_shardings"] = (t, t, t, t, t, lane, lane,
+                                           ss["pools"], ss["replicated"])
 
-            @partial(jax.jit, donate_argnums=(1,))
+            @partial(jax.jit, donate_argnums=(1,), **jit_kw)
             def batched_decode(params, cache, tokens, positions, limits,
                                block_tables, rng, scorer_params):
                 cache = dict(cache)
@@ -350,7 +446,7 @@ class Engine:
                     rng_keys=jnp.stack(keys), sample_fn=sample_fn,
                     eos_id=eos_id, step_id=step_id, score_fn=score_fn,
                     scratch_block=self.block_mgr.scratch_block,
-                    use_kernel=ecfg.use_kernel)
+                    use_kernel=ecfg.use_kernel, shard_specs=ss)
                 pools = out["cache"]
                 pools.pop("block_tables", None)
                 return (out["tokens"], out["confidences"], out["scores"],
@@ -365,23 +461,61 @@ class Engine:
         self._decode_single = (self._decode if ecfg.decode_horizon == 1
                                else make_decode(1))
 
+        pf_kv = None if ss is None else self._prefill_kv_specs
+        pf_act = None if ss is None else ss["prefill_act"]
+
         @jax.jit
         def prefill(params, tokens):
-            out = forward_full(params, cfg, tokens, return_kv=True)
+            out = forward_full(params, cfg, tokens, return_kv=True,
+                               kv_specs=pf_kv, act_spec=pf_act,
+                               tp_act_spec=pf_act)
             logits = out["logits"].at[..., V:].set(-jnp.inf)
+            if ss is not None:
+                # first-token sampling consumes these host-side: gather
+                # off the vocab sharding so the sampler's top-p cumsum
+                # never reduces over a sharded axis (see sample_fn)
+                logits = jax.lax.with_sharding_constraint(
+                    logits, ss["prefill_act"])
             return logits, out["kvs"]
 
         self._prefill = prefill
 
+        # prompt-KV scatter into the paged pools (one-shot prefix path).
+        # Jitted so a mesh engine can pin the output pools back to the
+        # canonical cache layout right at the write.
+        pool_keys = ("kv_pool",) if cfg.use_mla else ("k_pool", "v_pool")
+        wkv_kw = {}
+        if ss is not None:
+            wkv_kw["out_shardings"] = {
+                **{k: ss["pools"][k] for k in pool_keys},
+                "block_tables": ss["replicated"],  # one batch-1 row
+            }
+
+        @partial(jax.jit, donate_argnums=(0,), **wkv_kw)
+        def write_kv(sub_cache, kvs, lens):
+            return write_prefill_kv(cfg, sub_cache, kvs, lens)
+
+        self._write_kv = write_kv
+
         if self._chunk_supported:
-            @partial(jax.jit, donate_argnums=(1,))
+            cp_kw = {}
+            if ss is not None:
+                # chunk jobs run one prompt at a time (batch 1): the
+                # logits can't batch-shard, but the pools must come out
+                # in the serving layout the decode step expects
+                cp_kw["out_shardings"] = (
+                    ss["replicated"],
+                    {k: ss["pools"][k] for k in ("k_pool", "v_pool")})
+
+            @partial(jax.jit, donate_argnums=(1,), **cp_kw)
             def chunk_prefill(params, cache, tokens, positions, valid,
                               block_tables):
                 cache = dict(cache)
                 cache["block_tables"] = block_tables
                 out = prefill_chunk_step(params, cfg, tokens, positions,
                                          valid, cache,
-                                         window_len=ecfg.capacity)
+                                         window_len=ecfg.capacity,
+                                         shard_specs=ss)
                 logits = out["logits"].at[..., V:].set(-jnp.inf)
                 new_cache = out["cache"]
                 new_cache.pop("block_tables", None)
@@ -391,8 +525,9 @@ class Engine:
 
         # COW block copy: pool[:, dst] = pool[:, src], one jitted instance
         # for all block pairs (src/dst are traced scalars).
+        cb_kw = {} if ss is None else {"out_shardings": ss["pools"]}
         self._copy_block = jax.jit(partial(copy_kv_block, cfg),
-                                   donate_argnums=(0,))
+                                   donate_argnums=(0,), **cb_kw)
 
     # ------------------------------------------------------------------
     # cache plumbing
@@ -403,6 +538,9 @@ class Engine:
             self.cfg, self.ecfg.max_batch, self.ecfg.capacity,
             num_blocks=self.ecfg.num_blocks)
         cache.pop("block_tables", None)
+        if self._ss is not None:
+            cache = {k: jax.device_put(v, self._ss["pools"][k])
+                     for k, v in cache.items()}
         return cache
 
     def _split_prefill_kvs(self, kvs) -> Tuple[Optional[tuple],
@@ -438,13 +576,13 @@ class Engine:
         lens = jnp.full((1,), seq_len, jnp.int32)
         if cfg.use_mla:
             sub = {"kv_pool": cache["kv_pool"], "block_tables": bt}
-            sub = write_prefill_kv(cfg, sub, attn_kvs, lens)
+            sub = self._write_kv(sub, attn_kvs, lens)
             cache["kv_pool"] = sub["kv_pool"]
             return cache
         k, v = attn_kvs
         sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
                "block_tables": bt}
-        sub = write_prefill_kv(cfg, sub, (k, v), lens)
+        sub = self._write_kv(sub, (k, v), lens)
         cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
         return cache
 
@@ -1190,18 +1328,25 @@ class Engine:
             for t in running:
                 n_by_req[t.request_id] = n_by_req.get(t.request_id, 0) + 1
             t_dec = time.perf_counter()
+            ss = self._ss
             for name, arr in (("tokens", cur_tokens),
                               ("positions", positions),
                               ("block_tables", block_tables)):
                 if dirty[name] or dev[name] is None:
-                    dev[name] = jnp.asarray(arr)
+                    if ss is None:
+                        dev[name] = jnp.asarray(arr)
+                    else:  # upload straight into the mesh layout
+                        up = "table" if name == "block_tables" else "lane"
+                        dev[name] = jax.device_put(arr, ss[up])
                     dirty[name] = False
+            limits_dev = (jnp.asarray(limits) if ss is None
+                          else jax.device_put(limits, ss["lane"]))
             decode_fn = (self._decode if K_tick == K_cfg
                          else self._decode_single)
             (toks_d, confs_d, scores_d, tv_d, sv_d, fin_tok, fin_pos,
              cache, self._rng) = decode_fn(
                 self.params, cache, dev["tokens"], dev["positions"],
-                jnp.asarray(limits), dev["block_tables"],
+                limits_dev, dev["block_tables"],
                 self._rng, self.scorer_params)
             # single host sync per tick; .tolist() batches the per-trace
             # float()/int() conversions of the old per-token loop

@@ -108,6 +108,7 @@ def evaluate_method(method: str, params: dict, cfg: ModelConfig,
                     ecfg: EngineConfig,
                     scorer_params: Optional[dict] = None,
                     policy_kwargs: Optional[dict] = None,
+                    mesh=None,
                     verbose: bool = False) -> EvalResult:
     """One engine + one request at a time — the paper's serial setting."""
     tok = get_tokenizer()
@@ -119,7 +120,8 @@ def evaluate_method(method: str, params: dict, cfg: ModelConfig,
         policy = make_policy(method, **policy_kwargs)
         engine = Engine(params, cfg, ecfg, policy,
                         scorer_params=scorer_params
-                        if policy.uses_scorer else None)
+                        if policy.uses_scorer else None,
+                        mesh=mesh)
         prompt = tok.encode(make_prompt(p), add_bos=True)
         results.append(engine.serve(prompt, n_traces, request_id=qid))
     return _aggregate(method, n_traces, problems, results, verbose=verbose)
@@ -133,6 +135,7 @@ def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
                             arrival_times: Optional[Sequence[float]] = None,
                             on_result: Optional[
                                 Callable[[RequestResult], None]] = None,
+                            mesh=None,
                             verbose: bool = False) -> EvalResult:
     """All problems submitted to ONE engine as a request queue: traces of
     different requests co-exist in the decode batch and contend for the
@@ -162,7 +165,8 @@ def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
     default_policy = make_policy(method, **policy_kwargs)
     engine = Engine(params, cfg, ecfg, default_policy,
                     scorer_params=scorer_params
-                    if default_policy.uses_scorer else None)
+                    if default_policy.uses_scorer else None,
+                    mesh=mesh)
     results = engine.serve_batch(requests, on_complete=on_result)
     return _aggregate(method, n_traces, problems, results, verbose=verbose,
                       with_serving=True)
