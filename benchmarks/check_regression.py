@@ -53,6 +53,19 @@ RULES = {
         ("speedup_4x", "min_ratio", 0.3),
         ("horizons.8.tok_per_s", "min_ratio", 0.2),
     ],
+    "paged_kernel": [
+        # kernel must agree with the dense path before timing counts
+        ("outputs_close", "equal", None),
+        # the kernel-path acceptance floor: chunked prefill through the
+        # multi-query Pallas kernel beats the dense score-tensor path
+        ("prefill.speedup_x", "min_abs", 1.5),
+        ("prefill.speedup_x", "min_ratio", 0.3),
+        ("prefill.kernel_ms", "max_ratio", 5.0),
+        # decode is collapse-guarded only (interpret-mode grid overhead
+        # on CPU; the HBM-traffic win is a TPU property)
+        ("decode.speedup_x", "min_ratio", 0.3),
+        ("decode.kernel_ms", "max_ratio", 5.0),
+    ],
     "sharded_serving": [
         # the sharded-engine contract: token-identical generations on
         # the (data=2, model=2) mesh, full-length runs on both engines

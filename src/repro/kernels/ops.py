@@ -38,6 +38,61 @@ def paged_attention(q, k_pool, v_pool, block_tables, cache_lens, *,
                                   interpret=_interpret())
 
 
+def paged_attention_prefill(q, k_pool, v_pool, block_tables, prefix_lens,
+                            num_valid, own_k, own_v, *, scale: float,
+                            window: Optional[int] = None):
+    return _paged.paged_attention_prefill(
+        q, k_pool, v_pool, block_tables, prefix_lens, num_valid,
+        own_k, own_v, scale=scale, window=window, interpret=_interpret())
+
+
+def paged_attention_sharded(mesh, q, k_pool, v_pool, block_tables,
+                            cache_lens, *, scale: float):
+    """Mesh decode: ``shard_map`` over the ("data",) trace batch with the
+    pool's "model"-sharded KV heads handled shard-locally. Kernel grid
+    cells are independent per (lane, kv head), so each shard runs the
+    exact arithmetic of its slice of the single-device grid — the mesh
+    call is bit-identical to the unsharded kernel, no collectives."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_, kp, vp, bt, lens):
+        return paged_attention(q_, kp, vp, bt, lens, scale=scale)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P("data", "model", None), P(None, None, "model", None),
+                  P(None, None, "model", None), P("data", None), P("data")),
+        out_specs=P("data", "model", None), check_rep=False,
+    )(q, k_pool, v_pool, block_tables, cache_lens)
+
+
+def paged_attention_prefill_sharded(mesh, q, k_pool, v_pool, block_tables,
+                                    prefix_lens, num_valid, own_k, own_v, *,
+                                    scale: float,
+                                    window: Optional[int] = None):
+    """Mesh chunked prefill. Chunk jobs run one prompt at a time (batch
+    1), so only the "model" axis does real work (heads shard-local);
+    the batch-1 operands replicate over "data" and every data shard
+    computes the same tile."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_, kp, vp, bt, pls, nv, ok, ov):
+        return paged_attention_prefill(q_, kp, vp, bt, pls, nv, ok, ov,
+                                       scale=scale, window=window)
+
+    head = P(None, None, "model", None)
+    pool = P(None, None, "model", None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(head, pool, pool, P(None, None), P(None), P(None),
+                  head, head),
+        out_specs=head, check_rep=False,
+    )(q, k_pool, v_pool, block_tables, prefix_lens, num_valid,
+      own_k, own_v)
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, head_group: int = 4,
              initial_state=None):
     return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,

@@ -1,24 +1,46 @@
-"""Paged decode attention (THE serving hot spot) as a Pallas TPU kernel.
+"""Paged attention (THE serving hot spots) as one multi-query Pallas kernel.
 
-One new query token per sequence attends over that sequence's KV blocks,
-looked up through a block table — the exact memory layout the STEP pruning
-policy manages (pruning a trace returns its blocks to this pool).
+Queries attend over a sequence's KV blocks, looked up through a block
+table — the exact memory layout the STEP pruning policy manages (pruning
+a trace returns its blocks to this pool). One kernel body serves both
+engine-facing shapes:
+
+  * DECODE (``paged_attention``): one new query token per sequence
+    (C = 1), attending over the pooled cache only — the variant the
+    fused ``decode_horizon`` scan calls once per iteration;
+  * CHUNKED PREFILL (``paged_attention_prefill``): a chunk of C query
+    tokens per sequence attends over the pooled prefix (earlier chunks,
+    masked to slots strictly before the chunk) PLUS the chunk's own
+    exact KV with causal-within-chunk masking, per-token validity (the
+    final chunk is right-padded) and optional sliding-window masking —
+    replacing the dense ``[B, KVH, G, C, bp*bs + C]`` score tensor the
+    jnp fallback materializes per layer.
 
 TPU adaptation of vLLM's GPU PagedAttention:
-  * the block table and cache lengths are SCALAR-PREFETCHED (SMEM) so the
-    kernel can compute data-dependent block indices before the body runs —
-    the TPU-idiomatic replacement for GPU pointer-chasing;
-  * K/V pools stay in HBM (``memory_space=ANY``); each grid step loads one
-    [page, KVH_blk*hd] tile into registers/VMEM via dynamic slicing —
-    the analogue of the per-SM page loop in the CUDA kernel;
-  * grid = (batch, kv_heads, num_pages); the page dimension is the
-    sequential one carrying online-softmax state in VMEM scratch;
+  * the block table and per-sequence lengths are SCALAR-PREFETCHED
+    (SMEM) so the kernel can compute data-dependent block indices before
+    the body runs — the TPU-idiomatic replacement for pointer-chasing;
+  * K/V pools stay in HBM (``memory_space=ANY``); each grid step loads
+    one [page, hd] tile for one kv head via dynamic slicing;
+  * grid = (batch, kv_heads, num_pages [+ 1 own-chunk step]); the page
+    dimension is the sequential one carrying online-softmax state in
+    VMEM scratch. Pages holding no visible slots are skipped
+    (``pl.when``), so a chunk near the front of a long pool touches
+    only its live prefix — the dense path pays for every slot;
   * GQA: all G = H // KVH query heads of one kv head are processed
-    together as a [G, hd] tile (G*hd columns feed the MXU at once).
+    together, flattened with the chunk dim into a [C*G, hd] tile
+    (C*G*hd columns feed the MXU at once).
 
-VMEM working set per step: page_size*hd (K) + page_size*hd (V) +
-G*page_size (scores) + G*hd (acc) floats — a few hundred KB at
-page_size=16..64, far under the 16 MB budget.
+Numerics contract (pinned by tests against the dense path):
+  * f32 accumulation throughout (scores, softmax, PV);
+  * empty cache (``cache_len == 0`` and no visible own tokens) emits
+    ZEROS via the ``safe_l`` guard — the convention the dense paths
+    now share (a bare softmax over all -1e30 scores would average
+    garbage KV instead).
+
+VMEM working set per step: page*hd (K) + page*hd (V) + C*G*page
+(scores) + C*G*hd (acc) floats — a few hundred KB at the serving tile
+sizes, far under the 16 MB budget.
 """
 from __future__ import annotations
 
@@ -37,99 +59,220 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 NEG_INF = -1e30
 
 
-def _paged_kernel(block_tables_ref, cache_lens_ref,  # scalar prefetch
-                  q_ref, k_pool_ref, v_pool_ref, o_ref,
-                  m_scratch, l_scratch, acc_scratch,
-                  *, scale: float, page_size: int, num_pages: int):
+def _mq_paged_kernel(*refs, scale: float, page_size: int, num_pages: int,
+                     groups: int, window: Optional[int], has_own: bool):
+    """Shared body. ``refs`` layout (scalar prefetch first):
+
+      decode : bt, lens, q, k_pool, v_pool, o, m, l, acc
+      prefill: bt, lens, nvalid, q, k_pool, v_pool, own_k, own_v,
+               o, m, l, acc
+
+    ``lens[b]`` = number of valid pooled slots. For prefill (no
+    wraparound: slot == position) this doubles as the chunk's start
+    position, so query c sits at absolute position ``lens[b] + c``.
+    """
+    if has_own:
+        (bt_ref, lens_ref, nvalid_ref, q_ref, k_pool_ref, v_pool_ref,
+         own_k_ref, own_v_ref, o_ref, m_s, l_s, acc_s) = refs
+    else:
+        (bt_ref, lens_ref, q_ref, k_pool_ref, v_pool_ref,
+         o_ref, m_s, l_s, acc_s) = refs
     b = pl.program_id(0)
     h = pl.program_id(1)
     p = pl.program_id(2)
 
     @pl.when(p == 0)
     def _init():
-        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
-        l_scratch[...] = jnp.zeros_like(l_scratch)
-        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
 
-    cache_len = cache_lens_ref[b]
+    cache_len = lens_ref[b]
+
+    def online_update(s, mask):
+        """Fold one masked [C*G, S_blk] score tile into the softmax state."""
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]                      # [C*G, 1]
+        l_prev = l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        return m_new, alpha * l_prev + jnp.sum(pexp, axis=-1,
+                                               keepdims=True), pexp, alpha
+
+    # ---- pooled-prefix pages -------------------------------------------
     page_start = p * page_size
-    # a page is live if any of its slots hold valid tokens
     live = page_start < cache_len
+    if has_own:
+        live &= p < num_pages
+        if window is not None:
+            # the loosest query (chunk-local c = 0, position cache_len)
+            # sees slots > cache_len - window; pages entirely left of
+            # that are dead for every query in the chunk
+            live &= page_start + page_size > cache_len - window
 
     @pl.when(live)
-    def _compute():
-        block_id = block_tables_ref[b, p]
-        # dynamic-slice one page of K/V for this kv head from HBM
+    def _pool_page():
+        block_id = bt_ref[b, p]
         k = k_pool_ref[block_id, pl.ds(0, page_size), h, :]
         v = v_pool_ref[block_id, pl.ds(0, page_size), h, :]
         k = k.astype(jnp.float32)              # [page, hd]
         v = v.astype(jnp.float32)
-        q = q_ref[0, 0].astype(jnp.float32)    # [G, hd]
+        q = q_ref[0, 0].astype(jnp.float32)    # [C*G, hd]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # [G, page]
+            preferred_element_type=jnp.float32) * scale  # [C*G, page]
         slot = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = slot < cache_len
-        s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_scratch[...]                # [G, 1]
-        l_prev = l_scratch[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        pexp = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_new = alpha * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
-        acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+        if has_own:
+            c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups
+            mask &= c < nvalid_ref[b]          # padded queries emit zeros
+            if window is not None:
+                mask &= slot > (cache_len + c - window)
+        m_new, l_new, pexp, alpha = online_update(s, mask)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
             pexp, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        m_scratch[...] = m_new
-        l_scratch[...] = l_new
-        acc_scratch[...] = acc
+        m_s[...] = m_new
+        l_s[...] = l_new
 
-    @pl.when(p == num_pages - 1)
+    # ---- the chunk's own exact KV (final grid step, prefill only) ------
+    if has_own:
+        @pl.when(p == num_pages)
+        def _own_chunk():
+            k = own_k_ref[0, 0].astype(jnp.float32)   # [C, hd]
+            v = own_v_ref[0, 0].astype(jnp.float32)
+            q = q_ref[0, 0].astype(jnp.float32)       # [C*G, hd]
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # [C*G, C]
+            c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups
+            j = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            nv = nvalid_ref[b]
+            mask = (j <= c) & (j < nv) & (c < nv)     # causal + no pad
+            if window is not None:
+                mask &= j > (c - window)
+            m_new, l_new, pexp, alpha = online_update(s, mask)
+            acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+                pexp, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_s[...] = m_new
+            l_s[...] = l_new
+
+    @pl.when(p == num_pages + int(has_own) - 1)
     def _finalize():
-        l = l_scratch[...]
-        safe_l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_scratch[...] / safe_l).astype(o_ref.dtype)
+        l = l_s[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> zeros
+        o_ref[0, 0] = (acc_s[...] / safe_l).astype(o_ref.dtype)
+
+
+def _mq_paged_call(qf, k_pool, v_pool, block_tables, lens, nvalid,
+                   own_k, own_v, *, scale, window, interpret):
+    """Dispatch the shared kernel. qf [B, KVH, C*G, hd] (flattened query
+    tile); own_k/own_v [B, KVH, C, hd] or None (decode)."""
+    B, KVH, CG, hd = qf.shape
+    page_size = k_pool.shape[1]
+    bp = block_tables.shape[1]
+    has_own = own_k is not None
+    C = own_k.shape[2] if has_own else 1
+    groups = CG // C
+
+    kernel = functools.partial(
+        _mq_paged_kernel, scale=scale, page_size=page_size, num_pages=bp,
+        groups=groups, window=window, has_own=has_own)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, CG, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [block_tables, lens]
+    num_prefetch = 2
+    if has_own:
+        in_specs += [
+            pl.BlockSpec((1, 1, C, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+        ]
+        operands.append(nvalid)
+        num_prefetch = 3
+    operands += [qf, k_pool, v_pool]
+    if has_own:
+        operands += [own_k, own_v]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_prefetch,
+        grid=(B, KVH, bp + int(has_own)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, CG, hd),
+                               lambda b, h, p, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, CG, hd), qf.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, cache_lens: jax.Array, *,
                     scale: float, interpret: bool = False) -> jax.Array:
-    """q [B, H, hd]; pools [NB, page, KVH, hd]; block_tables [B, bp];
-    cache_lens [B]. Returns [B, H, hd]."""
+    """Decode: q [B, H, hd]; pools [NB, page, KVH, hd]; block_tables
+    [B, bp]; cache_lens [B] valid slots. Returns [B, H, hd].
+
+    The C = 1 specialization of the multi-query kernel — what the fused
+    ``decode_horizon`` scan invokes once per iteration. ``cache_len == 0``
+    rows emit zeros (the engine's dead-slot convention)."""
     B, H, hd = q.shape
-    NB, page_size, KVH, _ = k_pool.shape
-    bp = block_tables.shape[1]
+    KVH = k_pool.shape[2]
     G = H // KVH
     # [B, KVH, G, hd]: all G query heads of a kv head form one MXU tile
     qg = q.reshape(B, KVH, G, hd)
-
-    kernel = functools.partial(
-        _paged_kernel, scale=scale, page_size=page_size, num_pages=bp)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, KVH, bp),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, *_: (b, h, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, p, *_: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
-        ],
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(block_tables, cache_lens, qg, k_pool, v_pool)
+    out = _mq_paged_call(qg, k_pool, v_pool, block_tables,
+                         cache_lens, None, None, None,
+                         scale=scale, window=None, interpret=interpret)
     return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "interpret"))
+def paged_attention_prefill(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            prefix_lens: jax.Array, num_valid: jax.Array,
+                            own_k: jax.Array, own_v: jax.Array, *,
+                            scale: float, window: Optional[int] = None,
+                            interpret: bool = False) -> jax.Array:
+    """Chunked prefill: q [B, C, H, hd] attends over the pooled prefix
+    plus the chunk's own exact (un-roundtripped) KV.
+
+    prefix_lens [B]: pooled tokens strictly before this chunk — also the
+    chunk's start position (prefill never wraps: slot == position, which
+    the engine gates chunked prefill on). Query c of row b sits at
+    absolute position ``prefix_lens[b] + c`` (positions are contiguous
+    across the chunk, including right-padding). num_valid [B]: real
+    (non-padded) tokens; padded queries emit zeros and padded own-KV
+    columns are masked. own_k/own_v [B, C, KVH, hd]. Returns
+    [B, C, H, hd].
+    """
+    B, C, H, hd = q.shape
+    KVH = k_pool.shape[2]
+    G = H // KVH
+    # [B, KVH, C*G, hd]: chunk tokens x groups of one kv head in one tile
+    qf = q.reshape(B, C, KVH, G, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, KVH, C * G, hd)
+    ok = own_k.transpose(0, 2, 1, 3)  # [B, KVH, C, hd]
+    ov = own_v.transpose(0, 2, 1, 3)
+    out = _mq_paged_call(qf, k_pool, v_pool, block_tables,
+                         prefix_lens, num_valid, ok, ov,
+                         scale=scale, window=window, interpret=interpret)
+    return out.reshape(B, KVH, C, G, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, C, H, hd)

@@ -48,8 +48,63 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     valid = jnp.arange(bp * bs)[None, :] < cache_lens[:, None]
     scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
+    # empty-cache convention (pinned across kernel + dense paths): a row
+    # with zero valid slots emits ZEROS, not a softmax over -inf (NaN) or
+    # a uniform average over garbage KV
+    probs = jnp.where(valid[:, None, None, :], probs, 0.0)
     out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v.dtype), v)
     return out.reshape(B, H, hd)
+
+
+def paged_attention_prefill_ref(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_tables: jax.Array,
+                                prefix_lens: jax.Array, num_valid: jax.Array,
+                                own_k: jax.Array, own_v: jax.Array,
+                                scale: float,
+                                window: Optional[int] = None) -> jax.Array:
+    """Chunked-prefill paged attention oracle (mirrors the dense layer
+    math in ``layers.gqa_attention_prefill_chunk``).
+
+    q [B, C, H, hd]; pools [NB, bs, KVH, hd]; block_tables [B, bp];
+    prefix_lens [B] pooled tokens before the chunk (== chunk start,
+    slot == position); num_valid [B] real tokens in the chunk;
+    own_k/own_v [B, C, KVH, hd]. Returns [B, C, H, hd]; padded queries
+    and empty rows emit zeros.
+    """
+    B, C, H, hd = q.shape
+    NB, bs, KVH, _ = k_pool.shape
+    bp = block_tables.shape[1]
+    G = H // KVH
+    kc = k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    vc = v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+    keys = jnp.concatenate([kc, own_k], axis=1)
+    vals = jnp.concatenate([vc, own_v], axis=1)
+    positions = prefix_lens[:, None] + jnp.arange(C)[None, :]
+    valid = jnp.arange(C)[None, :] < num_valid[:, None]
+    q_pos = positions[:, :, None]
+    pool_pos = jnp.arange(bp * bs)[None, None, :]
+    pool_mask = jnp.broadcast_to(pool_pos < prefix_lens[:, None, None],
+                                 (B, C, bp * bs))
+    own_mask = (positions[:, None, :] <= q_pos) & valid[:, None, :]
+    mask = jnp.concatenate(
+        [pool_mask, jnp.broadcast_to(own_mask, (B, C, C))], axis=2)
+    if window is not None:
+        all_pos = jnp.concatenate(
+            [jnp.broadcast_to(pool_pos, (B, 1, bp * bs)),
+             jnp.broadcast_to(positions[:, None, :], (B, 1, C))], axis=2)
+        mask &= all_pos > (q_pos - window)
+    mask &= valid[:, :, None]
+    qg = q.reshape(B, C, KVH, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, keys,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask[:, None, None], jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, vals.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, hd)
 
 
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,

@@ -73,6 +73,14 @@ def main():
     ap.add_argument("--decode-horizon", type=int, default=1,
                     help="fused decode horizon: K decode iterations per "
                          "jitted device call (1 = one token per tick)")
+    ap.add_argument("--use-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="Pallas paged-attention path for decode + "
+                         "chunked prefill: 'auto' compiles the kernels "
+                         "on TPU and keeps the dense XLA path on CPU "
+                         "hosts; 'on' forces the kernels (interpret "
+                         "mode on CPU — a correctness harness, not a "
+                         "fast path there)")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
@@ -91,7 +99,9 @@ def main():
         sampling=SamplingParams(max_new_tokens=args.max_new),
         prefill_chunk_size=args.chunk or None,
         max_tokens_per_step=args.max_tokens_per_step or None,
-        decode_horizon=args.decode_horizon)
+        decode_horizon=args.decode_horizon,
+        use_kernel={"auto": "auto", "on": True, "off": False}[
+            args.use_kernel])
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \

@@ -197,10 +197,9 @@ def gqa_attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
                             preferred_element_type=jnp.float32)
         scores *= 1.0 / math.sqrt(hd)
         mask = _attn_mask(S, S, window)
-        scores = jnp.where(mask[None, None, None], scores, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
-        out = out.reshape(B, S, H * hd)
+        out = _masked_softmax_pv(scores, mask[None, None, None], v,
+                                 "bkgqs,bskh->bqkgh")
+        out = out.astype(x.dtype).reshape(B, S, H * hd)
     if act_spec is not None:  # exact TP: gather heads before the wo
         out = jax.lax.with_sharding_constraint(out, act_spec)  # contraction
     out = out @ p["wo"]
@@ -228,17 +227,44 @@ def paged_kv_update(pool: jax.Array, block_tables: jax.Array,
     return pool.at[block_ids, offset].set(new_kv)
 
 
+def _masked_softmax_pv(scores: jax.Array, mask: jax.Array,
+                       v: jax.Array, pv_einsum: str) -> jax.Array:
+    """Masked softmax + PV contraction, accumulated in f32, with the
+    kernel's empty-row convention: rows whose mask is all-False (e.g.
+    ``cache_len == 0`` dead slots) emit ZEROS instead of softmaxing the
+    -1e30 fill into a uniform average over garbage KV. This is the
+    numerics contract the Pallas paged kernels follow, so the dense
+    fallbacks and ``use_kernel=True`` agree within reduction-order
+    noise. Returns f32."""
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    return jnp.einsum(pv_einsum, p, v.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
 def paged_attention_decode(pool_k: jax.Array, pool_v: jax.Array,
                            q: jax.Array, block_tables: jax.Array,
                            cache_lens: jax.Array, scale: float,
-                           use_kernel: bool = False) -> jax.Array:
+                           use_kernel: bool = False,
+                           kernel_mesh=None) -> jax.Array:
     """Decode attention over the paged pool.
 
     q [B, H, hd]; pools [N_blocks, bs, KVH, hd]; block_tables [B, bp];
     cache_lens [B] number of valid tokens. Returns [B, H, hd].
+
+    ``kernel_mesh`` (with ``use_kernel``) routes through the shard_map
+    wrapper: lanes shard over "data", the pool's KV heads over "model",
+    each computed shard-locally (see ``kernels.ops``).
     """
     if use_kernel:
         from repro.kernels import ops as kops
+        if kernel_mesh is not None:
+            return kops.paged_attention_sharded(
+                kernel_mesh, q, pool_k, pool_v, block_tables, cache_lens,
+                scale=scale)
         return kops.paged_attention(q, pool_k, pool_v, block_tables,
                                     cache_lens, scale=scale)
     B, H, hd = q.shape
@@ -253,10 +279,9 @@ def paged_attention_decode(pool_k: jax.Array, pool_v: jax.Array,
     scores = jnp.einsum("bkgh,bskh->bkgs", qg, k,
                         preferred_element_type=jnp.float32) * scale
     valid = jnp.arange(bp * bs)[None, :] < cache_lens[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
-    return out.reshape(B, H, hd)
+    out = _masked_softmax_pv(scores, valid[:, None, None, :], v,
+                             "bkgs,bskh->bkgh")
+    return out.astype(q.dtype).reshape(B, H, hd)
 
 
 def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
@@ -300,7 +325,8 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
         else positions + 1
     out = paged_attention_decode(
         pool_k, pool_v, q, cache["block_tables"], new_lens,
-        scale=1.0 / math.sqrt(hd), use_kernel=cache.get("use_kernel", False))
+        scale=1.0 / math.sqrt(hd), use_kernel=cache.get("use_kernel", False),
+        kernel_mesh=cache.get("kernel_mesh"))
     out = out.reshape(B, 1, H * hd)
     if act_spec is not None:  # exact TP (see swiglu): gather heads first
         out = jax.lax.with_sharding_constraint(out, act_spec)
@@ -313,6 +339,8 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
                                 k_pool: jax.Array, v_pool: jax.Array,
                                 block_tables: jax.Array, window_len: int,
                                 window: Optional[int] = None,
+                                use_kernel: bool = False,
+                                kernel_mesh=None,
                                 pool_spec=None, act_spec=None) -> tuple:
     """Prefill one chunk of a prompt against the paged KV cache.
 
@@ -323,12 +351,18 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     into the pool, then attends the chunk's queries over the pooled
     prefix *plus* the exact (un-roundtripped) chunk KV.
 
-    x [B, C, D]; positions [B, C] absolute prompt positions; valid
-    [B, C] marks real tokens (the final chunk is right-padded to the
-    static chunk width — padded slots write to the scratch block and
-    their outputs are discarded by the caller). Assumes prompt_len <=
-    window_len so slot == position (no wraparound during prefill; the
-    engine gates chunked prefill on this).
+    x [B, C, D]; positions [B, C] absolute prompt positions (contiguous
+    across the chunk, padding included); valid [B, C] marks real tokens
+    (the final chunk is right-padded to the static chunk width — padded
+    slots write to the scratch block and their outputs are discarded by
+    the caller). Assumes prompt_len <= window_len so slot == position
+    (no wraparound during prefill; the engine gates chunked prefill on
+    this).
+
+    ``use_kernel`` runs the attention itself through the multi-query
+    Pallas paged kernel (``kernels.paged_attention_prefill``): no dense
+    [B, KVH, G, C, bp*bs + C] score tensor, dead pool pages skipped.
+    ``kernel_mesh`` adds the shard_map routing for mesh engines.
     Returns (out [B, C, D], new_k_pool, new_v_pool).
     """
     B, C, D = x.shape
@@ -359,39 +393,58 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
         new_k_pool = jax.lax.with_sharding_constraint(new_k_pool, pool_spec)
         new_v_pool = jax.lax.with_sharding_constraint(new_v_pool, pool_spec)
 
-    # keys/values = [pooled prefix (earlier chunks) ++ exact own chunk].
-    # The pool side is masked to positions strictly before this chunk, so
-    # within-chunk attention never round-trips through the (bf16) pool —
-    # only the cross-chunk prefix does, exactly as decode reads it later.
-    kc = new_k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
-    vc = new_v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
-    keys = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
-    vals = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        # positions are contiguous across the chunk (engine contract),
+        # so the chunk start doubles as the pooled-prefix length and the
+        # valid prefix length is a per-row count
+        prefix_lens = positions[:, 0].astype(jnp.int32)
+        num_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+        args = (q, new_k_pool, new_v_pool, block_tables, prefix_lens,
+                num_valid, k, v)
+        kw = dict(scale=1.0 / math.sqrt(hd), window=window)
+        if kernel_mesh is not None:
+            out = kops.paged_attention_prefill_sharded(kernel_mesh, *args,
+                                                       **kw)
+        else:
+            out = kops.paged_attention_prefill(*args, **kw)
+        out = out.reshape(B, C, H * hd)
+    else:
+        # keys/values = [pooled prefix (earlier chunks) ++ exact own
+        # chunk]. The pool side is masked to positions strictly before
+        # this chunk, so within-chunk attention never round-trips
+        # through the (bf16) pool — only the cross-chunk prefix does,
+        # exactly as decode reads it later.
+        kc = new_k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+        vc = new_v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+        keys = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+        vals = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
 
-    q_pos = positions[:, :, None]                        # [B, C, 1]
-    chunk_start = positions[:, :1, None]                 # [B, 1, 1]
-    pool_pos = jnp.arange(bp * bs)[None, None, :]        # pool slot == pos
-    pool_mask = pool_pos < chunk_start                   # earlier chunks only
-    own_pos = positions[:, None, :]                      # [B, 1, C]
-    own_mask = (own_pos <= q_pos) & valid[:, None, :]    # causal + no pad
-    mask = jnp.concatenate(
-        [jnp.broadcast_to(pool_mask, (B, C, bp * bs)),
-         jnp.broadcast_to(own_mask, (B, C, C))], axis=2)
-    if window is not None:
-        all_pos = jnp.concatenate(
-            [jnp.broadcast_to(pool_pos, (B, 1, bp * bs)),
-             jnp.broadcast_to(own_pos, (B, 1, C))], axis=2)
-        mask &= all_pos > (q_pos - window)
+        q_pos = positions[:, :, None]                      # [B, C, 1]
+        chunk_start = positions[:, :1, None]               # [B, 1, 1]
+        pool_pos = jnp.arange(bp * bs)[None, None, :]      # pool slot == pos
+        pool_mask = pool_pos < chunk_start                 # earlier chunks
+        own_pos = positions[:, None, :]                    # [B, 1, C]
+        own_mask = (own_pos <= q_pos) & valid[:, None, :]  # causal + no pad
+        mask = jnp.concatenate(
+            [jnp.broadcast_to(pool_mask, (B, C, bp * bs)),
+             jnp.broadcast_to(own_mask, (B, C, C))], axis=2)
+        if window is not None:
+            all_pos = jnp.concatenate(
+                [jnp.broadcast_to(pool_pos, (B, 1, bp * bs)),
+                 jnp.broadcast_to(own_pos, (B, 1, C))], axis=2)
+            mask &= all_pos > (q_pos - window)
+        # padded queries fully masked -> zeros, the kernel's convention
+        mask &= valid[:, :, None]
 
-    group = H // KVH
-    qg = q.reshape(B, C, KVH, group, hd)
-    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, keys,
-                        preferred_element_type=jnp.float32)
-    scores *= 1.0 / math.sqrt(hd)
-    scores = jnp.where(mask[:, None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vals)
-    out = out.reshape(B, C, H * hd)
+        group = H // KVH
+        qg = q.reshape(B, C, KVH, group, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, keys,
+                            preferred_element_type=jnp.float32)
+        scores *= 1.0 / math.sqrt(hd)
+        out = _masked_softmax_pv(scores, mask[:, None, None], vals,
+                                 "bkgqs,bskh->bqkgh")
+        out = out.astype(x.dtype).reshape(B, C, H * hd)
     if act_spec is not None:  # exact TP (see swiglu): gather heads first
         out = jax.lax.with_sharding_constraint(out, act_spec)
     out = out @ p["wo"]
@@ -450,10 +503,9 @@ def gqa_attention_decode_contiguous(p: dict, cfg: ModelConfig, x: jax.Array,
                         preferred_element_type=jnp.float32)
     scores *= 1.0 / math.sqrt(hd)
     valid = jnp.arange(cap)[None, :] < lens[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
-    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    out = _masked_softmax_pv(scores, valid[:, None, None, :], v_cache,
+                             "bkgs,bskh->bkgh")
+    out = out.astype(x.dtype).reshape(B, 1, H * hd) @ p["wo"]
     return out, k_cache, v_cache
 
 

@@ -256,6 +256,10 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     new_cache = dict(cache)
     layer_pool = {} if shard_specs is None else shard_specs["layer_pool"]
     act = None if shard_specs is None else shard_specs["act"]
+    # mesh + kernel: route the paged-attention kernel through shard_map
+    # (lanes on "data", pool KV heads on "model", computed shard-local)
+    kmesh = (shard_specs["lane"].mesh
+             if use_kernel and shard_specs is not None else None)
 
     def wsc_h(x):
         # pin the residual stream AND the norm outputs feeding the
@@ -300,6 +304,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 {"k_pool": k_pool, "v_pool": v_pool,
                  "block_tables": cache["block_tables"],
                  "window_len": window_len, "use_kernel": use_kernel,
+                 "kernel_mesh": kmesh,
                  "pool_spec": layer_pool.get("k_pool"),
                  "act_spec": act}, 0)
             h = h + a
@@ -344,6 +349,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                     {"k_pool": k_pool, "v_pool": v_pool,
                      "block_tables": cache["block_tables"],
                      "window_len": window_len, "use_kernel": use_kernel,
+                     "kernel_mesh": kmesh,
                      "pool_spec": layer_pool.get("k_pool"),
                      "act_spec": act}, 0)
                 out_pools = (nk, nv)
@@ -514,7 +520,8 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
 
 def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                        positions: jax.Array, valid: jax.Array, cache: dict,
-                       window_len: int, shard_specs=None) -> dict:
+                       window_len: int, use_kernel: bool = False,
+                       shard_specs=None) -> dict:
     """Prefill one prompt chunk into the paged KV cache.
 
     tokens [B, C] (right-padded to the static chunk width); positions
@@ -522,6 +529,10 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     Earlier chunks' KV must already be in the pool (previous calls).
     Returns {logits [B, C, V], cache} — the caller samples from the
     logits at the prompt's last valid position of the final chunk.
+
+    ``use_kernel`` routes the chunk attention through the multi-query
+    Pallas paged kernel instead of materializing the dense
+    [B, KVH, G, C, bp*bs + C] score tensor per layer.
     """
     assert supports_chunked_prefill(cfg), cfg.arch_type
     new_cache = dict(cache)
@@ -529,6 +540,8 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     pool_spec = (None if shard_specs is None
                  else shard_specs["layer_pool"].get("k_pool"))
     act = None if shard_specs is None else shard_specs["prefill_act"]
+    kmesh = (shard_specs["lane"].mesh
+             if use_kernel and shard_specs is not None else None)
 
     def wsc_h(x):  # see decode_step: keep the residual carry pinned
         if act is None:
@@ -543,6 +556,7 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         a, nk, nv = L.gqa_attention_prefill_chunk(
             lp["attn"], cfg, a_in, positions, valid, k_pool, v_pool,
             cache["block_tables"], window_len, window=window,
+            use_kernel=use_kernel, kernel_mesh=kmesh,
             pool_spec=pool_spec, act_spec=act)
         h = h + a
         m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)

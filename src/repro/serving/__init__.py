@@ -1,4 +1,5 @@
-from repro.serving.engine import Engine, EngineConfig, Request, RequestResult
+from repro.serving.engine import (Engine, EngineConfig, Request,
+                                  RequestResult, resolve_use_kernel)
 from repro.serving.evaluate import (EvalResult, evaluate_method,
                                     evaluate_method_batched, make_problems,
                                     poisson_arrivals)
@@ -9,6 +10,7 @@ from repro.serving.sampling import SamplingParams, sample_tokens
 
 __all__ = [
     "Engine", "EngineConfig", "Request", "RequestResult",
+    "resolve_use_kernel",
     "EvalResult", "evaluate_method", "evaluate_method_batched",
     "make_problems", "poisson_arrivals",
     "BlockManager", "Reservation", "RequestQueue",

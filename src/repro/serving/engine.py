@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import os
 import time
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -93,6 +94,62 @@ from repro.serving.sampling import (SamplingParams, sample_logits,
                                     sample_tokens)
 
 
+def _default_use_kernel():
+    """``EngineConfig.use_kernel`` default, overridable via the
+    ``REPRO_USE_KERNEL`` env var ("1"/"on"/"true" -> True, "auto" ->
+    "auto", anything else -> False). This is how the CI kernel lane
+    flips the whole engine suite onto the Pallas path (interpret mode
+    on CPU) without touching test code."""
+    val = os.environ.get("REPRO_USE_KERNEL", "").strip().lower()
+    if val in ("1", "on", "true"):
+        return True
+    if val == "auto":
+        return "auto"
+    return False
+
+
+def resolve_use_kernel(setting, cfg: ModelConfig, mesh=None) -> bool:
+    """Resolve ``EngineConfig.use_kernel`` (False / True / "auto") to the
+    bool the jitted steps consume.
+
+    "auto" picks the compiled Pallas kernels on TPU and the dense XLA
+    path on CPU hosts — on CPU the kernels only run in interpret mode
+    (the kernel body executed as traced jnp), which is a correctness
+    harness, not a fast path; pass ``use_kernel=True`` to force it, as
+    the CI kernel lane does. On a mesh the kernel path additionally
+    needs the attention heads to divide the "model" axis so the
+    shard_map routing keeps every (lane, kv head) grid cell shard-local;
+    "auto" falls back to the dense path where the layout is not
+    covered, an explicit ``True`` raises ``NotImplementedError`` at
+    construction (never silently wrong tokens).
+    """
+    if setting is False or setting is None:
+        return False
+    if setting not in (True, "auto"):
+        raise ValueError(
+            f"use_kernel must be True, False or 'auto', got {setting!r}")
+    # the paged kernels cover GQA paged attention (the dense/MoE/hybrid
+    # attention layers); MLA's absorbed latent decode has no kernel path
+    covered = not cfg.use_mla
+    why = "MLA's absorbed latent decode has no Pallas kernel path"
+    if covered and mesh is not None:
+        model_n = mesh.shape["model"]
+        covered = (cfg.num_heads % model_n == 0
+                   and cfg.num_kv_heads % model_n == 0)
+        why = (f"kernel-on-mesh needs num_heads ({cfg.num_heads}) and "
+               f"num_kv_heads ({cfg.num_kv_heads}) divisible by the "
+               f"'model' axis ({model_n}) so the shard_map paged "
+               f"attention stays shard-local; use use_kernel='auto' to "
+               f"fall back to the dense path on this mesh")
+    if not covered:
+        if setting == "auto":
+            return False
+        raise NotImplementedError(f"use_kernel=True: {why}")
+    if setting == "auto":
+        return jax.default_backend() == "tpu"
+    return True
+
+
 @dataclasses.dataclass
 class EngineConfig:
     """Static engine resources (the 'GPU')."""
@@ -101,7 +158,13 @@ class EngineConfig:
     capacity: int = 512            # per-sequence token capacity (window)
     max_new_tokens: int = 160
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
-    use_kernel: bool = False
+    # Pallas paged-attention path for the engine-facing attention ops
+    # (fused decode + chunked prefill). False = dense jnp; True = always
+    # kernel (interpret mode on CPU); "auto" = kernel on TPU, dense on
+    # CPU, dense fallback on meshes the shard_map layout doesn't cover.
+    # Resolved by ``resolve_use_kernel`` at engine construction.
+    use_kernel: "bool | str" = dataclasses.field(
+        default_factory=_default_use_kernel)
     seed: int = 0
     # Prefill the prompt once per request and fork its blocks into every
     # trace (COW on first trace-private write). False restores the
@@ -319,6 +382,9 @@ class Engine:
         self.block_mgr = BlockManager(ecfg.num_blocks, bs)
         self._rng = jax.random.PRNGKey(ecfg.seed)
         self._chunk_supported = supports_chunked_prefill(cfg)
+        # resolved kernel routing for the jitted steps (may raise for
+        # unsupported explicit-True combinations — never wrong tokens)
+        self.use_kernel = resolve_use_kernel(ecfg.use_kernel, cfg, mesh)
         assert ecfg.decode_horizon >= 1, "decode_horizon must be >= 1"
         # ticks where admission pressure forced the horizon down to 1
         # (observable for tests/benchmarks)
@@ -446,7 +512,7 @@ class Engine:
                     rng_keys=jnp.stack(keys), sample_fn=sample_fn,
                     eos_id=eos_id, step_id=step_id, score_fn=score_fn,
                     scratch_block=self.block_mgr.scratch_block,
-                    use_kernel=ecfg.use_kernel, shard_specs=ss)
+                    use_kernel=self.use_kernel, shard_specs=ss)
                 pools = out["cache"]
                 pools.pop("block_tables", None)
                 return (out["tokens"], out["confidences"], out["scores"],
@@ -515,6 +581,7 @@ class Engine:
                 out = prefill_chunk_step(params, cfg, tokens, positions,
                                          valid, cache,
                                          window_len=ecfg.capacity,
+                                         use_kernel=self.use_kernel,
                                          shard_specs=ss)
                 logits = out["logits"].at[..., V:].set(-jnp.inf)
                 new_cache = out["cache"]

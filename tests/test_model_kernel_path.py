@@ -34,3 +34,34 @@ def test_forward_kernel_matches_jnp(arch):
         assert close.mean() > 0.97, f"{arch}: only {close.mean():.3f} close"
     else:
         np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+
+
+def test_prefill_chunk_step_kernel_matches_jnp():
+    """The full chunked-prefill model step through the multi-query paged
+    kernel == the dense path: logits at valid positions and the written
+    KV pools (the bytes decode reads later) agree."""
+    from repro.configs.registry import serving_config
+    from repro.models.model import init_decode_cache, prefill_chunk_step
+
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, C, cap = 1, 6, 64
+    cache0 = init_decode_cache(cfg, B, cap)
+    start, n_real = 19, 4  # chunk boundary mid-page, right-padded tail
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, C), 0,
+                              cfg.vocab_size)
+    positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(C)[None, :] < n_real
+    outs = {}
+    for uk in (False, True):
+        out = prefill_chunk_step(params, cfg, toks, positions, valid,
+                                 dict(cache0), window_len=cap,
+                                 use_kernel=uk)
+        outs[uk] = out
+    a = np.asarray(outs[False]["logits"][:, :n_real], np.float32)
+    b = np.asarray(outs[True]["logits"][:, :n_real], np.float32)
+    np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+    for key in ("k_pool", "v_pool"):
+        np.testing.assert_array_equal(
+            np.asarray(outs[False]["cache"][key], np.float32),
+            np.asarray(outs[True]["cache"][key], np.float32))

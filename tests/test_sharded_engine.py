@@ -305,6 +305,59 @@ def test_mesh_rejects_uncovered_archs():
 
 
 @needs4
+def test_mesh_use_kernel_validated_at_construction():
+    """Engine(mesh=..., use_kernel=True) is never silently unvalidated:
+    layouts the shard_map kernel path doesn't cover raise a clear
+    NotImplementedError at construction, and "auto" falls back to the
+    dense path instead."""
+    cfg, params, scorer, _, _ = _setup()
+    # (1, 4): num_kv_heads=2 doesn't divide model=4 -> uncovered
+    mesh = make_host_mesh(1, 4)
+    with pytest.raises(NotImplementedError, match="shard_map"):
+        Engine(params, cfg, dataclasses.replace(_ecfg(), use_kernel=True),
+               make_policy("step"), scorer_params=scorer, mesh=mesh)
+    eng = Engine(params, cfg,
+                 dataclasses.replace(_ecfg(), use_kernel="auto"),
+                 make_policy("step"), scorer_params=scorer, mesh=mesh)
+    assert eng.use_kernel is False  # auto: dense fallback, same tokens
+
+
+@needs4
+def test_mesh_use_kernel_token_identical():
+    """The covered layout (heads divide "model") routes the paged
+    kernels through shard_map: lanes on "data", pool KV heads computed
+    shard-locally on "model". Grid cells are independent, so the mesh
+    kernel engine is token- and score-identical to the single-device
+    kernel engine."""
+    cfg, params, scorer, _, prompts = _setup()
+    ecfg = dataclasses.replace(_ecfg(K=2, max_new=16), use_kernel=True)
+    single = Engine(params, cfg, ecfg, make_policy("step"),
+                    scorer_params=scorer)
+    sharded = Engine(params, cfg, ecfg, make_policy("step"),
+                     scorer_params=scorer, mesh=make_host_mesh(2, 2))
+    assert sharded.use_kernel is True
+    reqs = [Request(request_id=0, prompt_tokens=prompts[0], n_traces=4)]
+    _assert_identical(_serve(single, reqs, 99), _serve(sharded, reqs, 99))
+
+
+@needs4
+def test_mesh_use_kernel_chunked_prefill_identical():
+    """Chunked prefill through the multi-query kernel (batch-1 chunk
+    jobs: "model"-sharded heads, data-replicated tiles) composes with
+    the mesh and stays identical to the single-device kernel engine."""
+    cfg, params, scorer, tok, _ = _setup()
+    long_prompt = tok.encode("1+2-3+4-5+6-7+8=", add_bos=True)
+    ecfg = dataclasses.replace(_ecfg(chunk=8, max_new=16),
+                               use_kernel=True)
+    single = Engine(params, cfg, ecfg, make_policy("step"),
+                    scorer_params=scorer)
+    sharded = Engine(params, cfg, ecfg, make_policy("step"),
+                     scorer_params=scorer, mesh=make_host_mesh(2, 2))
+    reqs = [Request(request_id=0, prompt_tokens=long_prompt, n_traces=3)]
+    _assert_identical(_serve(single, reqs, 5), _serve(sharded, reqs, 5))
+
+
+@needs4
 def test_mesh_params_actually_sharded():
     """The mesh engine's params really live distributed: a wq shard on
     one device holds 1/model of the columns."""
