@@ -66,6 +66,20 @@ RULES = {
         ("decode.speedup_x", "min_ratio", 0.3),
         ("decode.kernel_ms", "max_ratio", 5.0),
     ],
+    "prefix_cache": [
+        # the prefix-cache contract: cache on/off generate identical
+        # tokens, every turn completes, and reuse actually happened
+        ("outputs_identical", "equal", None),
+        ("num_completed", "equal", None),
+        # acceptance floor: >= 0.8 of prompt tokens served from cache
+        ("prefix_hit_rate", "min_abs", 0.8),
+        ("total_cached_tokens", "min_frac", 1.0),
+        # measurable TTFT win over cache-off on the same seed (local
+        # runs show ~3.5x; 1.3 absorbs CI-runner noise)
+        ("ttft_speedup_x", "min_abs", 1.3),
+        ("ttft_speedup_x", "min_ratio", 0.3),
+        ("cache_on.mean_ttft_s", "max_ratio", 5.0),
+    ],
     "sharded_serving": [
         # the sharded-engine contract: token-identical generations on
         # the (data=2, model=2) mesh, full-length runs on both engines

@@ -82,7 +82,10 @@ def run(verbose: bool = False) -> dict:
             capacity=CAPACITY, max_new_tokens=MAX_NEW,
             sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
                                     max_new_tokens=MAX_NEW),
-            decode_horizon=K)
+            decode_horizon=K,
+            # cache off: the warmup pass replays the timed prompts — warm
+            # hits would skip prefill and distort the horizon comparison
+            prefix_cache=False)
         engine = Engine(params, cfg, ecfg, make_policy("sc"))
         # warm the jit caches with the full request set (prefill has one
         # compile per prompt length, first-token flush one per admission

@@ -41,7 +41,10 @@ def _build_engine(params, cfg, share: bool) -> Engine:
         max_new_tokens=MAX_NEW,
         sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
                                 max_new_tokens=MAX_NEW),
-        share_prompt_prefix=share)
+        share_prompt_prefix=share,
+        # cache off: this benchmark isolates WITHIN-request sharing; a
+        # cross-request hit would zero the very prefill being measured
+        prefix_cache=False)
     return Engine(params, cfg, ecfg, make_policy("sc"))
 
 

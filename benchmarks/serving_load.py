@@ -7,10 +7,19 @@ end-to-end latency, and writes the percentile summary to
 ``BENCH_serving.json`` — the artifact the CI benchmark-smoke job uploads
 and regression-checks, starting the repo's perf trajectory.
 
+``--multiturn`` runs the cross-request prefix-cache workload instead:
+two multi-turn conversations over one shared system prompt, replayed
+turn-by-turn with the cache off and on. Each turn's prompt extends the
+previous one, so with the cache on every turn after the first forks the
+parked blocks and prefills only the fresh suffix. Emits
+``BENCH_prefix_cache.json`` (hit rate, prefill tokens saved, TTFT
+on/off) and asserts the generated tokens are identical either way.
+
 Uses randomly-initialised weights (perf numbers don't need a trained
 model) so it runs in seconds on the CI CPU runners:
 
-    PYTHONPATH=src python -m benchmarks.serving_load [--out path.json]
+    PYTHONPATH=src python -m benchmarks.serving_load [--multiturn]
+        [--out path.json]
 """
 from __future__ import annotations
 
@@ -27,8 +36,9 @@ from repro.core.trace import TraceStatus
 from repro.data.tokenizer import get_tokenizer
 from repro.data.arithmetic import make_prompt
 from repro.models.init import init_params
-from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
-                           make_problems, poisson_arrivals, summarize)
+from repro.serving import (CacheStats, Engine, EngineConfig, Request,
+                           SamplingParams, make_problems, poisson_arrivals,
+                           summarize)
 
 N_REQUESTS = 6
 N_TRACES = 4
@@ -63,7 +73,11 @@ def run(verbose: bool = False) -> dict:
         sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
                                 max_new_tokens=MAX_NEW),
         prefill_chunk_size=PREFILL_CHUNK,
-        max_tokens_per_step=MAX_TOKENS_PER_STEP)
+        max_tokens_per_step=MAX_TOKENS_PER_STEP,
+        # cache off: the warmup replays request 0's prompt — a warm hit
+        # would skip its prefill and shift the blessed latency numbers.
+        # The cache gets its own workload (run_multiturn) below.
+        prefix_cache=False)
     engine = Engine(params, cfg, ecfg, make_policy("sc"))
 
     # warm the jit caches (prefill, chunk prefill, decode) so the timed
@@ -84,7 +98,7 @@ def run(verbose: bool = False) -> dict:
         assert all(t.status == TraceStatus.FINISHED for t in r.traces)
         assert r.metrics is not None and r.metrics.ttft_s is not None
         assert r.metrics.first_token_s >= r.metrics.arrival_s
-    assert engine.block_mgr.free_blocks == engine.block_mgr.num_blocks - 1
+    assert engine.pool_drained()
     engine.block_mgr.check_invariants()
 
     summary = summarize([r.metrics for r in results])
@@ -114,13 +128,134 @@ def run(verbose: bool = False) -> dict:
     return payload
 
 
+# ---------------------------------------------------------------------------
+# multi-turn / shared-template workload (cross-request prefix cache)
+# ---------------------------------------------------------------------------
+
+MT_TURNS = 10
+MT_CONVS = 2
+MT_MAX_NEW = 8
+MT_NUM_BLOCKS = 128
+MT_CAPACITY = 320
+# the shared "system prompt": ~169 tokens of template every conversation
+# starts from (10+ full KV blocks reusable across every turn)
+SYS_TEXT = "".join(f"{i % 10}+{(i + 3) % 10}-{(i + 7) % 10}= "
+                   for i in range(24))
+
+
+def _mt_engine(params, cfg, prefix_cache: bool) -> Engine:
+    ecfg = EngineConfig(
+        max_batch=2 * MT_CONVS, num_blocks=MT_NUM_BLOCKS,
+        capacity=MT_CAPACITY, max_new_tokens=MT_MAX_NEW,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=MT_MAX_NEW),
+        prefill_chunk_size=PREFILL_CHUNK,
+        prefix_cache=prefix_cache)
+    return Engine(params, cfg, ecfg, make_policy("sc"))
+
+
+def _mt_replay(engine: Engine, tok):
+    """Drive the conversations turn-by-turn; each turn's prompt is the
+    full history (system prompt + prior turns + responses)."""
+    sys_ids = tok.encode(SYS_TEXT, add_bos=True)
+    histories = [list(sys_ids) for _ in range(MT_CONVS)]
+    responses = [[] for _ in range(MT_CONVS)]
+    metrics = []
+    t0 = time.perf_counter()
+    for turn in range(MT_TURNS):
+        reqs = []
+        for c in range(MT_CONVS):
+            user = tok.encode(
+                f"{(2 * turn + c) % 10}+{(turn + 3 * c) % 10}=",
+                add_bos=False)
+            histories[c] = histories[c] + user
+            reqs.append(Request(request_id=turn * MT_CONVS + c,
+                                prompt_tokens=list(histories[c]),
+                                n_traces=1, policy=make_policy("sc")))
+        results = engine.serve_batch(reqs)
+        for c, r in enumerate(results):
+            out = [t for t in r.traces[0].output_tokens
+                   if t != tok.eos_id]
+            histories[c] = histories[c] + out
+            responses[c].append(out)
+            metrics.append(r.metrics)
+    wall = time.perf_counter() - t0
+    assert all(m.first_token_s is not None for m in metrics)
+    assert engine.pool_drained()
+    engine.block_mgr.check_invariants()
+    return responses, metrics, wall
+
+
+def run_multiturn(verbose: bool = False) -> dict:
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+    sides = {}
+    for mode in ("off", "on"):
+        engine = _mt_engine(params, cfg, prefix_cache=(mode == "on"))
+        # jit warmup on an unrelated prompt, then forget its KV so the
+        # timed replay starts from a cold cache
+        engine.serve_batch([Request(
+            request_id=0, n_traces=1, policy=make_policy("sc"),
+            prompt_tokens=tok.encode("9*9-8+7-6+5= " * 4, add_bos=True))])
+        if engine.prefix_cache is not None:
+            engine.prefix_cache.clear()
+            engine.prefix_cache.stats = CacheStats()
+        responses, metrics, wall = _mt_replay(engine, tok)
+        sides[mode] = (responses, summarize(metrics), wall)
+    identical = sides["on"][0] == sides["off"][0]
+    assert identical, "prefix cache changed the generated tokens"
+    (_, on, wall_on), (_, off, wall_off) = sides["on"], sides["off"]
+    payload = {
+        "benchmark": "prefix_cache",
+        "config": {
+            "turns": MT_TURNS, "conversations": MT_CONVS,
+            "max_new_tokens": MT_MAX_NEW, "num_blocks": MT_NUM_BLOCKS,
+            "capacity": MT_CAPACITY, "prefill_chunk_size": PREFILL_CHUNK,
+            "system_prompt_tokens": len(tok.encode(SYS_TEXT,
+                                                   add_bos=True)),
+        },
+        "outputs_identical": identical,
+        "num_completed": on["num_completed"],
+        "prefix_hit_rate": on["prefix_hit_rate"],
+        "total_prompt_tokens": on["total_prompt_tokens"],
+        "total_cached_tokens": on["total_cached_tokens"],
+        "prefill_tokens_saved": on["total_cached_tokens"],
+        "ttft_speedup_x": off["mean_ttft_s"] / on["mean_ttft_s"],
+        "cache_on": {"mean_ttft_s": on["mean_ttft_s"],
+                     "total_prefill_s": on["total_prefill_s"],
+                     "wall_s": wall_on},
+        "cache_off": {"mean_ttft_s": off["mean_ttft_s"],
+                      "total_prefill_s": off["total_prefill_s"],
+                      "wall_s": wall_off},
+    }
+    if verbose:
+        print(f"prefix_cache: {on['num_completed']} turns, "
+              f"hit_rate={payload['prefix_hit_rate']:.3f} "
+              f"({on['total_cached_tokens']}/{on['total_prompt_tokens']} "
+              f"prompt tokens from cache)")
+        print(f"  ttft  on={on['mean_ttft_s'] * 1e3:.1f}ms "
+              f"off={off['mean_ttft_s'] * 1e3:.1f}ms "
+              f"speedup={payload['ttft_speedup_x']:.2f}x")
+        print(f"  prefill  on={on['total_prefill_s']:.3f}s "
+              f"off={off['total_prefill_s']:.3f}s")
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    ap.add_argument("--multiturn", action="store_true",
+                    help="run the prefix-cache conversation workload "
+                         "instead of the Poisson load replay")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    payload = run(verbose=True)
-    out = os.path.abspath(args.out)
+    if args.multiturn:
+        payload, default_out = run_multiturn(verbose=True), \
+            "BENCH_prefix_cache.json"
+    else:
+        payload, default_out = run(verbose=True), "BENCH_serving.json"
+    out = os.path.abspath(args.out or os.path.join(
+        os.path.dirname(__file__), "..", default_out))
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"# wrote {out}")

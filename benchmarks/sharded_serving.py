@@ -115,7 +115,10 @@ def run(verbose: bool = False) -> dict:
         capacity=CAPACITY, max_new_tokens=MAX_NEW,
         sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
                                 max_new_tokens=MAX_NEW),
-        decode_horizon=DECODE_HORIZON)
+        decode_horizon=DECODE_HORIZON,
+        # cache off: single vs mesh replays the same prompts — warm hits
+        # would skip prefill work and invalidate the blessed timings
+        prefix_cache=False)
 
     single = Engine(params, cfg, ecfg, make_policy("sc"))
     stats_single, out_single = _run_engine(single, tok)

@@ -43,12 +43,25 @@ class AdmissionPressure:
     queued_requests: int = 0    # arrived requests not yet started
     free_blocks: int = 0
     total_blocks: int = 0
+    # prefix-cache occupancy (0 with the cache off). Parked blocks are
+    # NOT live-trace memory: the engine evicts them before consulting any
+    # pruning policy (evict-before-prune), so policies must count
+    # evictable cache blocks as headroom — otherwise cache occupancy
+    # would trigger proactive pruning the cache-off engine never does.
+    cached_blocks: int = 0      # blocks parked in the prefix-cache trie
+    evictable_blocks: int = 0   # parked blocks only the cache references
 
     @property
     def memory_utilization(self) -> float:
         if self.total_blocks <= 0:
             return 0.0
         return 1.0 - self.free_blocks / self.total_blocks
+
+    @property
+    def reclaimable_blocks(self) -> int:
+        """Headroom the scheduler can produce without touching a live
+        trace: the free list plus evict-before-prune cache blocks."""
+        return self.free_blocks + self.evictable_blocks
 
     @property
     def demand(self) -> int:
@@ -129,7 +142,7 @@ class StepPolicy(PruningPolicy):
         p = self.last_pressure
         if (self.proactive_free_blocks <= 0 or p is None
                 or p.demand == 0
-                or p.free_blocks >= self.proactive_free_blocks):
+                or p.reclaimable_blocks >= self.proactive_free_blocks):
             return []
         cands = [t for t in running if t.alive
                  and (t.step_scores

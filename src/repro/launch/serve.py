@@ -81,6 +81,13 @@ def main():
                          "hosts; 'on' forces the kernels (interpret "
                          "mode on CPU — a correctness harness, not a "
                          "fast path there)")
+    ap.add_argument("--prefix-cache", default=None,
+                    choices=["on", "off"],
+                    help="cross-request prefix caching: park completed "
+                         "prompts' KV blocks in a radix tree and serve "
+                         "matching prefixes of later requests with zero "
+                         "recompute (default: on, or the "
+                         "REPRO_PREFIX_CACHE env override)")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
@@ -101,7 +108,9 @@ def main():
         max_tokens_per_step=args.max_tokens_per_step or None,
         decode_horizon=args.decode_horizon,
         use_kernel={"auto": "auto", "on": True, "off": False}[
-            args.use_kernel])
+            args.use_kernel],
+        **({} if args.prefix_cache is None
+           else {"prefix_cache": args.prefix_cache == "on"}))
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \

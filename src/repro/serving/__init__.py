@@ -5,6 +5,7 @@ from repro.serving.evaluate import (EvalResult, evaluate_method,
                                     poisson_arrivals)
 from repro.serving.kv_manager import BlockManager, Reservation
 from repro.serving.metrics import RequestMetrics, percentiles, summarize
+from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.queue import RequestQueue
 from repro.serving.sampling import SamplingParams, sample_tokens
 
@@ -14,6 +15,7 @@ __all__ = [
     "EvalResult", "evaluate_method", "evaluate_method_batched",
     "make_problems", "poisson_arrivals",
     "BlockManager", "Reservation", "RequestQueue",
+    "PrefixCache", "CacheStats",
     "RequestMetrics", "percentiles", "summarize",
     "SamplingParams", "sample_tokens",
 ]

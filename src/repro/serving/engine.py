@@ -47,6 +47,17 @@ the flag off the engine reproduces the original per-trace prefill path
 (N sequential prompt prefills), which is the accounting baseline for
 Table 3.
 
+Cross-request prefix cache (``EngineConfig.prefix_cache``, default on):
+completed prompts' full KV blocks are parked in a radix tree
+(``serving/prefix_cache.py``) instead of freed; a later request whose
+prompt shares a block-aligned prefix forks the cached blocks (COW
+refcounting, zero recompute) and chunk-prefills only the suffix. Cached
+blocks are the lowest-priority memory in the pool: under pressure the
+engine evicts LRU cache-only blocks BEFORE pruning or preempting any
+live trace (evict-before-prune), so enabling the cache can only add
+scheduling headroom. Per-request hit accounting (``cached_tokens``)
+lands in ``RequestMetrics``.
+
 Multi-request scheduling: traces from different requests co-exist in the
 fixed-shape decode step, contend for the same block pool, and are
 aggregated into per-request ``RequestResult``s. Policies act per
@@ -89,6 +100,7 @@ from repro.models.model import (copy_kv_block, forward_full,
                                 write_prefill_kv)
 from repro.serving.kv_manager import BlockManager, Reservation
 from repro.serving.metrics import RequestMetrics
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.queue import RequestQueue
 from repro.serving.sampling import (SamplingParams, sample_logits,
                                     sample_tokens)
@@ -106,6 +118,15 @@ def _default_use_kernel():
     if val == "auto":
         return "auto"
     return False
+
+
+def _default_prefix_cache():
+    """``EngineConfig.prefix_cache`` default, overridable via the
+    ``REPRO_PREFIX_CACHE`` env var ("0"/"off"/"false" -> off, anything
+    else incl. unset -> on). The CI prefix-cache lane pins it to "1" so
+    the whole engine suite runs with cross-request KV reuse active."""
+    val = os.environ.get("REPRO_PREFIX_CACHE", "").strip().lower()
+    return val not in ("0", "off", "false")
 
 
 def resolve_use_kernel(setting, cfg: ModelConfig, mesh=None) -> bool:
@@ -178,6 +199,15 @@ class EngineConfig:
     # trace) and prefill tokens (chunks + one-shot prefills). None =
     # unlimited (admission bounded only by slots and blocks).
     max_tokens_per_step: Optional[int] = None
+    # Cross-request prefix cache: park completed prompts' full KV blocks
+    # in a radix tree and serve later requests' shared block-aligned
+    # prefixes from it (COW fork, zero recompute); LRU-evicted before
+    # any trace is pruned/preempted. Needs share_prompt_prefix and a
+    # paged-attention arch (chunked prefill computes the suffix);
+    # silently inactive otherwise. Default from REPRO_PREFIX_CACHE
+    # (unset -> on).
+    prefix_cache: bool = dataclasses.field(
+        default_factory=_default_prefix_cache)
     # Decode horizon: run K decode iterations inside ONE jitted device
     # call (fused lax.scan with on-device sampling, EOS masking and
     # step-boundary score capture) and sync tokens/confidences/scores to
@@ -256,6 +286,11 @@ class _ReqState:
         self.decode_s = 0.0
         self.t_done: Optional[float] = None
         self.warmup_recorded = not isinstance(policy, DeepConfPolicy)
+        # prefix-cache accounting: one probe per request; a hit holds
+        # forked block references until a _PrefillJob takes them over
+        self.cache_probed = False
+        self.cache_hit: Optional[Tuple[List[int], int]] = None
+        self.cached_tokens = 0
         # online-serving timestamps (absolute perf_counter seconds)
         self.arrived = False
         self.admit_t: Optional[float] = None
@@ -298,15 +333,29 @@ class _PrefillJob:
     the full set into the request's ``_SharedPrefix`` when the prompt is
     exhausted. ``abort`` (memory pressure) returns every block; the
     prefill restarts from scratch on the next admission attempt.
+
+    A prefix-cache hit seeds the job with ``base_blocks`` (forked cached
+    blocks covering the first ``base_tokens`` prompt tokens): the prefill
+    starts at ``pos = base_tokens`` and only computes the suffix. Chunk
+    boundaries stay on the absolute ``chunk``-token grid so the suffix
+    chunks are the exact chunks a cold prefill would have run. ``eager``
+    jobs (cache hit on an engine configured for one-shot prefill) run
+    all their chunks in one tick instead of interleaving with decode.
     """
 
     def __init__(self, st: _ReqState, reservation: Reservation,
-                 blocks_per_seq: int):
+                 blocks_per_seq: int, chunk: int,
+                 base_blocks: Sequence[int] = (), base_tokens: int = 0,
+                 eager: bool = False):
         self.st = st
         self.tokens: List[int] = list(st.req.prompt_tokens)
-        self.pos = 0
+        self.pos = base_tokens
+        self.chunk = chunk
+        self.eager = eager
+        self.base: List[int] = list(base_blocks)
         self.res = reservation
         self.row = np.zeros((blocks_per_seq,), np.int32)
+        self.row[:len(self.base)] = self.base
         self.last_logits = None
 
     @property
@@ -319,6 +368,13 @@ class _PrefillJob:
 
     def abort(self) -> None:
         self.res.abort()
+        if self.base:
+            # drop the forked cache references; the cached blocks stay
+            # parked in the trie. The restart prefills from scratch, so
+            # the request's hit accounting is rolled back too.
+            self.res.mgr.free(self.base)
+            self.base = []
+            self.st.cached_tokens = 0
 
 
 class _TokenBudget:
@@ -382,6 +438,17 @@ class Engine:
         self.block_mgr = BlockManager(ecfg.num_blocks, bs)
         self._rng = jax.random.PRNGKey(ecfg.seed)
         self._chunk_supported = supports_chunked_prefill(cfg)
+        # cross-request prefix cache: needs the shared-prefix holder (the
+        # parked blocks ARE a holder that outlives its request) and the
+        # chunked-prefill path (the suffix continues from cached KV)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if (ecfg.prefix_cache and ecfg.share_prompt_prefix
+                and self._chunk_supported):
+            self.prefix_cache = PrefixCache(self.block_mgr)
+        # with the cache on, the device KV pool must outlive a single
+        # serve_batch call — parked blocks are worthless if the pool
+        # they point into is re-initialized (zeroed) between batches
+        self._kv_cache = None
         # resolved kernel routing for the jitted steps (may raise for
         # unsupported explicit-True combinations — never wrong tokens)
         self.use_kernel = resolve_use_kernel(ecfg.use_kernel, cfg, mesh)
@@ -597,6 +664,29 @@ class Engine:
                                    donate_argnums=(0,), **cb_kw)
 
     # ------------------------------------------------------------------
+    # pool accounting
+    # ------------------------------------------------------------------
+    @property
+    def idle_free_blocks(self) -> int:
+        """Free-list blocks plus blocks parked in the prefix cache —
+        everything reclaimable when no request is live."""
+        cached = (self.prefix_cache.cached_blocks
+                  if self.prefix_cache is not None else 0)
+        return self.block_mgr.free_blocks + cached
+
+    def pool_drained(self) -> bool:
+        """True when no live request holds pool memory: every non-free
+        block is parked in the prefix cache at refcount exactly 1 (the
+        cache's own reference). With the cache off this degenerates to
+        ``free_blocks == num_blocks - 1`` — the pre-cache drain check."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_integrity()
+            if any(self.block_mgr.ref_count(b) != 1
+                   for b in self.prefix_cache.blocks()):
+                return False
+        return self.idle_free_blocks == self.block_mgr.num_blocks - 1
+
+    # ------------------------------------------------------------------
     # cache plumbing
     # ------------------------------------------------------------------
     def _init_cache(self):
@@ -754,7 +844,8 @@ class Engine:
             n_traces=len(st.traces),
             num_pruned=num_pruned,
             num_preemptions=num_preempt,
-            wait_s=wait_s, prefill_s=st.prefill_s, decode_s=st.decode_s)
+            wait_s=wait_s, prefill_s=st.prefill_s, decode_s=st.decode_s,
+            cached_tokens=st.cached_tokens)
         return RequestResult(
             request_id=st.request_id, answer=answer, traces=st.traces,
             latency_s=done - t_start,
@@ -781,7 +872,14 @@ class Engine:
         share = ecfg.share_prompt_prefix
         chunk = ecfg.prefill_chunk_size if self._chunk_supported else None
         mgr = self.block_mgr
-        cache = self._init_cache()
+        pcache = self.prefix_cache
+        if pcache is not None and self._kv_cache is not None:
+            # persistent pool: parked blocks keep their KV across batches.
+            # Take ownership — the first jitted step donates the buffers,
+            # so no second reference may survive.
+            cache, self._kv_cache = self._kv_cache, None
+        else:
+            cache = self._init_cache()
         by_req: Dict[int, _ReqState] = {st.request_id: st for st in states}
         assert len(by_req) == len(states), "duplicate request_id in batch"
 
@@ -825,10 +923,35 @@ class Engine:
                     t.runnable_since = -1.0
                 waiting.extend(st.traces)
 
-        def release_prefix(st: _ReqState):
-            if st.prefix is not None:
-                mgr.free(st.prefix.blocks)
-                st.prefix = None
+        def release_prefix(st: _ReqState, park: bool = True):
+            """Drop the request's shared-prefix holder references. With
+            the prefix cache on, the prompt's full blocks are parked in
+            the trie for cross-request reuse instead of freed; the
+            partial tail block (written by this request's own prefill)
+            is never shared and always returns to the pool. ``park=False``
+            (memory reclaim) frees everything outright."""
+            if st.prefix is None:
+                return
+            blocks, n_tok = st.prefix.blocks, st.prefix.seq_len
+            st.prefix = None
+            if park and pcache is not None and n_tok >= bs:
+                n_full = n_tok // bs
+                pcache.insert(st.req.prompt_tokens, blocks[:n_full])
+                if blocks[n_full:]:
+                    mgr.free(blocks[n_full:])
+            else:
+                mgr.free(blocks)
+
+        def evict_for(n: int) -> bool:
+            """Free-list headroom for ``n`` blocks, reclaiming LRU
+            prefix-cache blocks on demand — parked KV is the cheapest
+            memory in the pool (a reuse opportunity, not live compute),
+            so it always goes before any trace is pruned/preempted."""
+            if mgr.can_allocate(n):
+                return True
+            if pcache is not None:
+                pcache.evict(n - mgr.free_blocks)
+            return mgr.can_allocate(n)
 
         def release(trace: Trace, status: TraceStatus):
             nonlocal cache
@@ -868,7 +991,10 @@ class Engine:
             live.add(skip_rid)
             for st in started:
                 if st.prefix is not None and st.request_id not in live:
-                    release_prefix(st)
+                    # reclaim must FREE, not park: parking would report
+                    # no free-list progress and fall through to
+                    # preemption with reusable blocks still held
+                    release_prefix(st, park=False)
             return mgr.free_blocks > before
 
         def abort_other_jobs(skip_rid: int) -> bool:
@@ -888,7 +1014,11 @@ class Engine:
                 waiting_traces=len(waiting),
                 queued_requests=len(pending),
                 free_blocks=mgr.free_blocks,
-                total_blocks=ecfg.num_blocks - 1)
+                total_blocks=ecfg.num_blocks - 1,
+                cached_blocks=(pcache.cached_blocks
+                               if pcache is not None else 0),
+                evictable_blocks=(pcache.evictable_blocks
+                                  if pcache is not None else 0))
 
         def handle_memory_full(needy: Optional[Trace], rid: int,
                                at_admission: bool = False) -> bool:
@@ -902,6 +1032,13 @@ class Engine:
             last-arrived running trace (any request) is PREEMPTED
             (discard-and-recompute) into the waiting queue.
             """
+            # evict-before-prune: LRU cache-only blocks are reclaimed
+            # before any live trace is touched. This ordering is what
+            # keeps cache-on scheduling a superset of cache-off headroom
+            # (the cache can only ADD free-able memory, never displace a
+            # trace that would have run with the cache off).
+            if pcache is not None and pcache.evict(1):
+                return True
             st = by_req[rid]
             own_running = [t for t in running if t.request_id == rid]
             victim = st.policy.on_memory_full(own_running,
@@ -978,7 +1115,7 @@ class Engine:
             secured = 1
             for j, bidx in frontier_walk(trace, k_tick):
                 if not owns_write_block(trace, bidx):
-                    if not mgr.can_allocate(1):
+                    if not evict_for(1):
                         break
                     claim_write_block(trace, bidx)
                 secured = j + 1
@@ -1004,19 +1141,23 @@ class Engine:
             nonlocal cache
             st = job.st
             L = len(job.tokens)
-            C = chunk
+            C = job.chunk
+            base_n = len(job.base)
             while not job.done:
-                c = min(C, L - job.pos)
+                # stay on the absolute C-token chunk grid: a cache-hit
+                # suffix (pos starts at base_tokens) runs the exact
+                # chunks a cold prefill of this prompt would have run
+                c = min(C - job.pos % C, L - job.pos)
                 if not budget.can(c, force=not running):
                     return "budget"
                 need_total = mgr.blocks_for_tokens(job.pos + c)
-                need_new = need_total - job.res.num_taken
+                need_new = need_total - base_n - job.res.num_taken
                 while need_new > 0:
                     got = job.res.take(need_new)
                     if got is not None:
                         note_peak()
-                        start = job.res.num_taken - len(got)
-                        job.row[start : job.res.num_taken] = got
+                        start = base_n + job.res.num_taken - len(got)
+                        job.row[start : base_n + job.res.num_taken] = got
                         break
                     start_wait_clock(st)
                     if not handle_memory_full(None, st.request_id,
@@ -1035,13 +1176,14 @@ class Engine:
                 job.pos += c
                 budget.spend(c)
                 st.prefill_s += time.perf_counter() - t_pf
-                if running:
+                if running and not job.eager:
                     # interleave: while traces decode, at most one chunk
                     # per tick so prefill never stalls the decode batch
                     break
             if job.done:
+                base, job.base = job.base, []
                 st.prefix = _SharedPrefix(
-                    blocks=job.res.commit(), seq_len=L,
+                    blocks=base + job.res.commit(), seq_len=L,
                     last_logits=job.last_logits, slot_state=None)
                 jobs.pop(st.request_id, None)
                 return "ready"
@@ -1064,7 +1206,7 @@ class Engine:
             # must fit too, or the headroom check right after us fails
             # and the just-computed prefill is wasted (worst case: an
             # endless build/reclaim/rebuild cycle)
-            if not mgr.can_allocate(need + 1):
+            if not evict_for(need + 1):
                 if trace.runnable_since < 0:
                     trace.runnable_since = time.perf_counter()
                 if not handle_memory_full(None, st.request_id,
@@ -1214,15 +1356,42 @@ class Engine:
                          and prefix_fits)
                 if fresh:
                     L = len(trace.prompt_tokens)
-                    if (st.prefix is None and chunk is not None
-                            and L > chunk):
+                    if (st.prefix is None and pcache is not None
+                            and not st.cache_probed):
+                        # probe the prefix cache exactly once per request
+                        # (stats stay deterministic across re-picks) and
+                        # pin the hit immediately: the fork's refcounts
+                        # protect the matched blocks from eviction while
+                        # the request waits for a slot or budget
+                        st.cache_probed = True
+                        hit_blocks, hit_tokens = pcache.match(
+                            trace.prompt_tokens)
+                        if hit_blocks:
+                            st.cache_hit = (mgr.fork(hit_blocks),
+                                            hit_tokens)
+                            st.cached_tokens = hit_tokens
+                    use_job = st.prefix is None and (
+                        st.request_id in jobs
+                        or st.cache_hit is not None
+                        or (chunk is not None and L > chunk))
+                    if use_job:
                         # chunked path: open/advance the prefill job; the
-                        # trace admits once the prefix completes
+                        # trace admits once the prefix completes. Cache
+                        # hits always take this path — the suffix runs as
+                        # block-size chunks (a fixed jit shape) even on
+                        # engines configured for one-shot prefill.
                         job = jobs.get(st.request_id)
                         if job is None:
+                            base, base_tokens = st.cache_hit or ([], 0)
+                            st.cache_hit = None
                             job = _PrefillJob(
-                                st, mgr.reserve(mgr.blocks_for_tokens(L)),
-                                self.blocks_per_seq)
+                                st,
+                                mgr.reserve(mgr.blocks_for_tokens(L)
+                                            - len(base)),
+                                self.blocks_per_seq,
+                                chunk=chunk if chunk is not None else bs,
+                                base_blocks=base, base_tokens=base_tokens,
+                                eager=chunk is None)
                             jobs[st.request_id] = job
                         before = job.pos
                         status = advance_job(job, budget)
@@ -1254,7 +1423,7 @@ class Engine:
                     # headroom for this trace's first private block (the
                     # COW copy of the prompt's tail block, or a fresh
                     # block when the prompt ends exactly on a boundary)
-                    if not mgr.can_allocate(1):
+                    if not evict_for(1):
                         if trace.runnable_since < 0:
                             trace.runnable_since = time.perf_counter()
                         if not handle_memory_full(None, st.request_id,
@@ -1271,7 +1440,7 @@ class Engine:
                         skipped.add(trace.request_id)
                         continue
                     need = mgr.blocks_for_tokens(min(ids_len + 1, cap))
-                    if not mgr.can_allocate(need):
+                    if not evict_for(need):
                         # memory full at admission: STEP prunes,
                         # baselines wait
                         if trace.runnable_since < 0:
@@ -1279,7 +1448,7 @@ class Engine:
                         if not handle_memory_full(None, st.request_id,
                                                   at_admission=True):
                             break
-                        if not mgr.can_allocate(need):
+                        if not evict_for(need):
                             break
                         continue
                     budget.spend(ids_len + K_cfg)
@@ -1349,7 +1518,7 @@ class Engine:
                 bidx = (pos % cap) // bs  # writes land at pos % window
                 if owns_write_block(trace, bidx):
                     continue
-                while not mgr.can_allocate(1):
+                while not evict_for(1):
                     if not handle_memory_full(trace, trace.request_id):
                         progress = False
                         break
@@ -1380,7 +1549,7 @@ class Engine:
                     needed_new += len(
                         {bidx for _, bidx in frontier_walk(trace, K_cfg)
                          if not owns_write_block(trace, bidx)})
-                if needed_new and not mgr.can_allocate(needed_new + 1):
+                if needed_new and not evict_for(needed_new + 1):
                     self.horizon_fallbacks += 1
                     K_tick = 1
 
@@ -1472,4 +1641,6 @@ class Engine:
         jobs.clear()
         for st in states:  # defensive: no prefix may outlive its batch
             release_prefix(st)
+        if pcache is not None:
+            self._kv_cache = cache  # keep parked KV live for the next batch
         return peak_blocks

@@ -25,6 +25,15 @@ already taken hold completed chunks' KV; ``take`` extends the holding as
 later chunks are computed; ``abort`` returns everything to the pool if
 the prefill is cancelled under memory pressure; ``commit`` transfers
 ownership of the full set to the caller (the shared-prefix holder).
+
+Cross-request prefix caching (``serving/prefix_cache.py``) layers on the
+same refcounts: a completed request's full prompt blocks are PARKED —
+the cache keeps one reference per block instead of freeing it — so a
+later request with the same token prefix forks them (refcount++) with
+zero recompute. Parked blocks at refcount 1 are reclaimed LRU-first
+under memory pressure, before any live trace is pruned or preempted.
+The allocator needs no new machinery for this; the cache is just
+another reference holder.
 """
 from __future__ import annotations
 

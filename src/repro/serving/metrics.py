@@ -45,6 +45,8 @@ class RequestMetrics:
     wait_s: float = 0.0              # memory-induced waiting (Table 3)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    cached_tokens: int = 0           # prompt tokens served from the
+    #                                  prefix cache (no prefill compute)
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -96,6 +98,8 @@ def summarize(metrics: Sequence[RequestMetrics],
     span = (max((m.finished_s for m in done), default=0.0)
             - min((m.arrival_s for m in metrics), default=0.0))
     total_tokens = sum(m.output_tokens for m in done)
+    total_prompt = sum(m.prompt_tokens for m in metrics)
+    total_cached = sum(m.cached_tokens for m in metrics)
     return {
         "num_requests": len(metrics),
         "num_completed": len(done),
@@ -114,6 +118,12 @@ def summarize(metrics: Sequence[RequestMetrics],
         "total_decode_s": sum(m.decode_s for m in metrics),
         "num_pruned": sum(m.num_pruned for m in metrics),
         "num_preemptions": sum(m.num_preemptions for m in metrics),
+        "total_prompt_tokens": total_prompt,
+        "total_cached_tokens": total_cached,
+        "prefix_hit_rate": (total_cached / total_prompt
+                            if total_prompt > 0 else 0.0),
+        "requests_with_prefix_hit": sum(
+            m.cached_tokens > 0 for m in metrics),
     }
 
 

@@ -50,7 +50,7 @@ def test_t0_batch_matches_serial_serve_greedy(setup):
     cfg, params, prompts = setup
     eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
     batched = _token_sets(eng.serve_batch(_reqs(prompts)))
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     for i, p in enumerate(prompts):
         eng1 = Engine(params, cfg, _ecfg(), make_policy("sc"))
         solo = eng1.serve(p, 2, request_id=i)
@@ -68,7 +68,7 @@ def test_arrival_order_invariance(setup):
         reqs = _reqs(prompts)
         results = eng.serve_batch([reqs[i] for i in order])
         outs.append(_token_sets(results))
-        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        assert eng.pool_drained()
         eng.block_mgr.check_invariants()
     assert outs[0] == outs[1] == outs[2]
 
@@ -82,7 +82,7 @@ def test_chunked_prefill_matches_unchunked(setup):
         eng = Engine(params, cfg, _ecfg(chunk=chunk), make_policy("sc"))
         results = eng.serve_batch(_reqs(prompts))
         outs.append(_token_sets(results))
-        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        assert eng.pool_drained()
         eng.block_mgr.check_invariants()
     assert outs[0] == outs[1]
 
@@ -96,7 +96,7 @@ def test_chunked_prefill_token_budget(setup):
     for r in results:
         assert all(t.status == TraceStatus.FINISHED for t in r.traces)
         assert r.metrics is not None and r.metrics.ttft_s >= 0
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_late_arrival_and_completion_stream(setup):
@@ -134,7 +134,7 @@ def test_metrics_under_forced_preemption(setup):
     assert m.ttft_s >= 0 and m.tpot_s >= 0
     assert m.e2e_s == pytest.approx(res.latency_s, rel=1e-6)
     assert m.output_tokens == res.total_tokens
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_policies_observe_admission_pressure(setup):
@@ -175,7 +175,7 @@ def test_step_proactive_pruning_under_pressure(setup):
                                    prompt_tokens=prompts[0],
                                    n_traces=6, policy=policy)])[0]
     assert res.num_pruned > 0
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_request_queue_ordering():

@@ -97,7 +97,7 @@ def _serve(eng, prompt, n_traces, rng_seed):
     res = eng.serve_batch([Request(request_id=0, prompt_tokens=prompt,
                                    n_traces=n_traces,
                                    policy=make_policy("step"))])[0]
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
     return res
 
@@ -230,7 +230,7 @@ def test_horizon_pressure_fallback(setup):
                                    n_traces=8, policy=policy)])[0]
     assert eng.horizon_fallbacks > 0
     assert res.wait_s == 0.0 and res.num_preemptions == 0
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 
@@ -246,7 +246,7 @@ def test_step_prunes_in_tight_pool_with_horizon(setup):
     assert res.wait_s == 0.0 and res.num_preemptions == 0
     assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
                for t in res.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 
@@ -260,7 +260,7 @@ def test_sc_preemption_in_tight_pool_with_horizon(setup):
     res = eng.serve(prompts[0], 8)
     assert res.num_preemptions > 0
     assert all(t.status == TraceStatus.FINISHED for t in res.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 
@@ -281,7 +281,7 @@ def test_horizon_with_chunked_prefill_multi_request(setup):
             assert all(t.status == TraceStatus.FINISHED for t in r.traces)
         outs.append({r.request_id: [t.output_tokens for t in r.traces]
                      for r in results})
-        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        assert eng.pool_drained()
         eng.block_mgr.check_invariants()
     assert outs[0] == outs[1]
 
@@ -301,7 +301,7 @@ def test_horizon_respects_token_budget(setup):
     results = eng.serve_batch(reqs)
     for r in results:
         assert all(t.status == TraceStatus.FINISHED for t in r.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 

@@ -42,7 +42,7 @@ def test_sc_completes_all_traces(setup):
     assert all(t.status == TraceStatus.FINISHED for t in res.traces)
     assert res.num_pruned == 0
     # allocator clean: every block returned
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 
@@ -55,7 +55,7 @@ def test_sc_preempts_under_memory_pressure(setup):
     assert any(t.prefill_count > 1 for t in res.traces)
     # SC never prunes: every trace eventually finishes
     assert all(t.status == TraceStatus.FINISHED for t in res.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_step_never_waits(setup):
@@ -67,7 +67,7 @@ def test_step_never_waits(setup):
     # pruned + finished covers every trace
     assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
                for t in res.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_step_prunes_lowest_scored(setup):
@@ -94,7 +94,7 @@ def test_deepconf_warmup_then_prune(setup):
     # threshold exists); later traces may be terminated
     assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
                for t in res.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
 
 
 def test_cot_single_trace(setup):
@@ -140,7 +140,7 @@ def test_shared_prefix_matches_per_trace_greedy(setup):
         res = eng.serve(prompt, 6)
         assert all(t.status == TraceStatus.FINISHED for t in res.traces)
         outs.append([t.output_tokens for t in res.traces])
-        assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+        assert eng.pool_drained()
         eng.block_mgr.check_invariants()
     assert outs[0] == outs[1]
 
@@ -177,7 +177,7 @@ def test_serve_batch_multi_request(setup):
         assert len(r.traces) == 4
         assert all(t.request_id == r.request_id for t in r.traces)
         assert all(t.status == TraceStatus.FINISHED for t in r.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
 
 
@@ -192,7 +192,35 @@ def test_serve_batch_queues_beyond_max_batch(setup):
     results = eng.serve_batch(reqs)
     for r in results:
         assert all(t.status == TraceStatus.FINISHED for t in r.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
+
+
+def test_prefix_cache_on_off_identity(setup):
+    """The cross-request prefix cache must be invisible to generation:
+    tokens, step scores and prune decisions are identical with the cache
+    on vs off under fixed RNG (a hit serves bit-identical KV and the
+    engine evicts parked blocks before any pruning decision)."""
+    cfg, params, scorer, _ = setup
+    tok = get_tokenizer()
+    prompt = tok.encode("1+2-3+4-5+6-7+8=" * 2, add_bos=True)  # 33 toks
+    runs = []
+    for on in (True, False):
+        ecfg = EngineConfig(
+            max_batch=8, num_blocks=24, capacity=128, max_new_tokens=64,
+            sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                    max_new_tokens=64),
+            share_prompt_prefix=True, prefix_cache=on)
+        eng = Engine(params, cfg, ecfg, make_policy("step"),
+                     scorer_params=scorer)
+        rounds = []
+        for _ in range(2):  # round 2 replays into a warm cache
+            res = eng.serve(prompt, 6)
+            rounds.append([(t.output_tokens, t.step_scores, t.status)
+                           for t in res.traces])
+        runs.append(rounds)
+        assert eng.pool_drained()
+        eng.block_mgr.check_invariants()
+    assert runs[0] == runs[1]
 
 
 def test_serve_batch_step_cross_request_contention(setup):
@@ -213,5 +241,5 @@ def test_serve_batch_step_cross_request_contention(setup):
         assert r.num_preemptions == 0
         assert all(t.status in (TraceStatus.FINISHED, TraceStatus.PRUNED)
                    for t in r.traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()

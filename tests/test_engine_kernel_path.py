@@ -60,7 +60,7 @@ def _serve(setup, use_kernel, prompt_text, n_traces, seed, **ecfg_kw):
                  make_policy("step"), scorer_params=scorer)
     eng._rng = jax.random.PRNGKey(seed)
     res = eng.serve(tok.encode(prompt_text, add_bos=True), n_traces)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
     return res
 

@@ -9,6 +9,7 @@ from hypothesis import strategies as st
 from repro.configs.registry import serving_config
 from repro.models.model import copy_kv_block
 from repro.serving.kv_manager import BlockManager
+from repro.serving.prefix_cache import PrefixCache
 
 
 def test_fork_increments_refcounts():
@@ -124,6 +125,53 @@ def test_invariants_under_random_alloc_fork_free(num_blocks, ops):
         mgr.free(h)
     assert mgr.free_blocks == num_blocks - 1
     mgr.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 24),
+       st.lists(st.tuples(st.integers(0, 4), st.integers(0, 7)),
+                max_size=50))
+def test_invariants_with_prefix_cache_interleaving(num_blocks, ops):
+    """Prefix-cache insert/match(+fork)/evict interleaved with plain
+    alloc/fork/free: refcounts never go negative (``free`` would assert),
+    an evicted block returns to the free list exactly once (a second
+    return would trip the free-list partition check), and releasing every
+    outside reference plus clearing the cache drains the pool."""
+    bs = 4
+    base = list(range(40))
+    # nested prefixes (shared chunks) + a disjoint prompt: inserts
+    # exercise both the new-node and the duplicate-drop path
+    prompts = [base[:5], base[:9], base[:13], [99] * 7]
+    mgr = BlockManager(num_blocks=num_blocks, block_size=bs)
+    cache = PrefixCache(mgr)
+    held = []  # references owned outside the cache
+    for op, n in ops:
+        if op == 0:  # complete a request: park a prompt's full blocks
+            p = prompts[n % len(prompts)]
+            blocks = mgr.allocate(len(p) // bs)
+            if blocks is not None:
+                cache.insert(p, blocks)  # ownership moves to the cache
+        elif op == 1:  # new request: match + COW-fork the hit
+            got, n_tok = cache.match(prompts[n % len(prompts)])
+            assert n_tok == len(got) * bs
+            if got:
+                held.append(mgr.fork(got))
+        elif op == 2 and held:  # request finishes: drop its references
+            mgr.free(held.pop(n % len(held)))
+        elif op == 3:  # memory pressure
+            cache.evict(n % 3 + 1)
+        elif op == 4:  # unrelated private allocation
+            blocks = mgr.allocate(n % 2 + 1)
+            if blocks is not None:
+                held.append(blocks)
+        mgr.check_invariants()
+        cache.check_integrity()
+    for h in held:
+        mgr.free(h)
+    cache.clear()
+    assert mgr.free_blocks == num_blocks - 1
+    mgr.check_invariants()
+    cache.check_integrity()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,305 @@
+"""Cross-request prefix cache: trie match/insert/evict semantics, the
+partial-tail-block boundary rule, and engine integration (a cache hit
+forks parked KV with zero recompute and is invisible to generation)."""
+import jax
+import pytest
+
+from repro.configs.registry import serving_config
+from repro.core.pruning import make_policy
+from repro.core.scorer import init_scorer
+from repro.core.trace import TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.models.init import init_params
+from repro.serving import (Engine, EngineConfig, PrefixCache, Request,
+                           SamplingParams)
+from repro.serving.kv_manager import BlockManager
+
+BS = 16  # cfg.kv_block_size for serving_config
+
+
+# ---------------------------------------------------------------------------
+# trie-level semantics (no model)
+# ---------------------------------------------------------------------------
+
+def _mgr(n=32):
+    return BlockManager(num_blocks=n, block_size=BS)
+
+
+def _toks(n, base=100):
+    return list(range(base, base + n))
+
+
+def test_insert_parks_only_full_blocks():
+    mgr = _mgr()
+    pc = PrefixCache(mgr)
+    t = _toks(3 * BS + 5)
+    blocks = mgr.allocate(3)  # the engine passes blocks[:len(t) // BS]
+    assert pc.insert(t, blocks) == 3
+    assert pc.cached_blocks == 3
+    assert mgr.used_blocks == 3  # cache now owns them
+    pc.check_integrity()
+    mgr.check_invariants()
+
+
+def test_match_is_strict_prefix_at_block_boundaries():
+    """Boundary +/-1 regression: a query never matches its own last
+    block-aligned chunk in full — at least one token is always left to
+    prefill (its logits seed the first sampled token)."""
+    mgr = _mgr()
+    pc = PrefixCache(mgr)
+    t = _toks(2 * BS)
+    pc.insert(t, mgr.allocate(2))
+    # exact multiple: strict prefix only -> one block, not two
+    got, n = pc.match(t)
+    assert (len(got), n) == (1, BS)
+    # one short of the boundary: the second chunk is partial -> one block
+    got, n = pc.match(t[: 2 * BS - 1])
+    assert (len(got), n) == (1, BS)
+    # one past: both cached chunks are strict-prefix -> two blocks
+    got, n = pc.match(_toks(2 * BS + 1))
+    assert (len(got), n) == (2, 2 * BS)
+    # shorter than one block: never matches anything
+    got, n = pc.match(t[: BS - 1])
+    assert (len(got), n) == (0, 0)
+    assert pc.stats.lookups == 4 and pc.stats.misses == 1
+
+
+def test_match_stops_at_divergence():
+    mgr = _mgr()
+    pc = PrefixCache(mgr)
+    t = _toks(2 * BS)
+    pc.insert(t, mgr.allocate(2))
+    diverged = t[:BS] + _toks(BS + 1, base=999)
+    got, n = pc.match(diverged)
+    assert (len(got), n) == (1, BS)
+
+
+def test_insert_duplicate_chunk_drops_callers_reference():
+    """Re-inserting a cached prefix must not leak: the caller's duplicate
+    references go back to the free list, the cache keeps its originals."""
+    mgr = _mgr(8)
+    pc = PrefixCache(mgr)
+    t = _toks(2 * BS + 3)
+    first = mgr.allocate(2)
+    pc.insert(t, first)
+    second = mgr.allocate(2)
+    assert pc.insert(t, second) == 0  # nothing new
+    assert pc.cached_blocks == 2
+    assert mgr.used_blocks == 2  # duplicates freed
+    assert sorted(pc.blocks()) == sorted(first)
+    pc.check_integrity()
+    mgr.check_invariants()
+
+
+def test_evict_is_lru_and_leaf_first():
+    mgr = _mgr(8)
+    pc = PrefixCache(mgr)
+    chain = _toks(2 * BS)  # two-block chain a1 -> a2
+    other = _toks(BS, base=500)  # one-block sibling b1
+    a = mgr.allocate(2)
+    pc.insert(chain, a)
+    b = mgr.allocate(1)
+    pc.insert(other, b)
+    pc.match(chain + [0])  # refresh the whole chain: b1 is now LRU
+    assert pc.evict(1) == 1
+    assert sorted(pc.blocks()) == sorted(a)  # b went first
+    # leaf-first: the chain unwinds a2 before a1
+    assert pc.evict(1) == 1
+    assert list(pc.blocks()) == [a[0]]
+    assert pc.evict(5) == 1  # only one block left to give
+    assert pc.cached_blocks == 0
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_evict_skips_pinned_blocks():
+    """Blocks a live request forked out of the cache (refcount > 1) are
+    pinned: eviction must pass over them."""
+    mgr = _mgr(8)
+    pc = PrefixCache(mgr)
+    t = _toks(BS)
+    pc.insert(t, mgr.allocate(1))
+    got, n = pc.match(t + [0])
+    fork = mgr.fork(got)  # a request now reads this block
+    assert pc.evict(1) == 0  # pinned
+    assert pc.cached_blocks == 1
+    mgr.free(fork)
+    assert pc.evict(1) == 1
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_clear_returns_cache_only_blocks():
+    mgr = _mgr(8)
+    pc = PrefixCache(mgr)
+    pc.insert(_toks(2 * BS), mgr.allocate(2))
+    assert pc.clear() == 2
+    assert pc.cached_blocks == 0
+    assert mgr.free_blocks == 7
+    mgr.check_invariants()
+
+
+def test_engine_config_env_default(monkeypatch):
+    def mk():
+        return EngineConfig(max_batch=2, num_blocks=8, capacity=64,
+                            max_new_tokens=4,
+                            sampling=SamplingParams(max_new_tokens=4))
+    monkeypatch.delenv("REPRO_PREFIX_CACHE", raising=False)
+    assert mk().prefix_cache is True
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "0")
+    assert mk().prefix_cache is False
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "off")
+    assert mk().prefix_cache is False
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+    assert mk().prefix_cache is True
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scorer = init_scorer(jax.random.PRNGKey(1), cfg.d_model)
+    return cfg, params, scorer
+
+
+def _prompt(tok, n_tokens, body="1+2-3+4-5+6-7+8= "):
+    """A prompt of exactly ``n_tokens`` (char-level tokenizer + bos)."""
+    ids = tok.encode((body * 8)[: n_tokens - 1], add_bos=True)
+    assert len(ids) == n_tokens
+    return ids
+
+
+def _ecfg(num_blocks=48, max_new=16, batch=8, prefix_cache=True, **kw):
+    return EngineConfig(
+        max_batch=batch, num_blocks=num_blocks, capacity=128,
+        max_new_tokens=max_new,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=max_new),
+        share_prompt_prefix=True, prefix_cache=prefix_cache, **kw)
+
+
+def test_second_request_served_from_cache(setup):
+    """Identical prompt twice: the repeat forks the parked blocks (hit
+    metrics recorded) and generates the exact same tokens (the cached KV
+    is bit-identical to recomputing the prefix)."""
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    prompt = _prompt(tok, 40)  # 2 full blocks + an 8-token tail
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    assert eng.prefix_cache is not None
+    r1 = eng.serve(prompt, 2)
+    assert r1.metrics.cached_tokens == 0
+    assert eng.prefix_cache.cached_blocks == 2  # tail block NOT parked
+    r2 = eng.serve(prompt, 2)
+    assert r2.metrics.cached_tokens == 2 * BS
+    assert ([t.output_tokens for t in r2.traces]
+            == [t.output_tokens for t in r1.traces])
+    s = eng.prefix_cache.stats
+    assert (s.hits, s.misses) == (1, 1)
+    assert s.hit_tokens == 2 * BS
+    assert eng.pool_drained()
+    eng.block_mgr.check_invariants()
+
+    from repro.serving import summarize
+    agg = summarize([r1.metrics, r2.metrics])
+    assert agg["total_prompt_tokens"] == 80
+    assert agg["total_cached_tokens"] == 32
+    assert agg["prefix_hit_rate"] == pytest.approx(0.4)
+    assert agg["requests_with_prefix_hit"] == 1
+
+
+@pytest.mark.parametrize("delta,expect_cached", [(-1, BS), (0, BS),
+                                                 (1, 2 * BS)])
+def test_block_boundary_prompt_lengths(setup, delta, expect_cached):
+    """Partial-tail regression at 2*BS +/- 1 prompt tokens: the warm run
+    reuses exactly the full strict-prefix blocks and still generates the
+    cold run's tokens (the tail is always re-prefilled privately)."""
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    prompt = _prompt(tok, 2 * BS + delta)
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    r1 = eng.serve(prompt, 2)
+    r2 = eng.serve(prompt, 2)
+    assert r2.metrics.cached_tokens == expect_cached
+    assert ([t.output_tokens for t in r2.traces]
+            == [t.output_tokens for t in r1.traces])
+    assert eng.pool_drained()
+    eng.block_mgr.check_invariants()
+
+
+def test_cache_on_off_identical_outputs(setup):
+    """Acceptance pin: engine outputs are identical with the cache on vs
+    off under fixed RNG, including the warm (hit-serving) rounds."""
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    prompts = [_prompt(tok, 33), _prompt(tok, 25, body="9*8-7+6= "),
+               _prompt(tok, 33)]  # third repeats the first
+    runs = []
+    for on in (True, False):
+        eng = Engine(params, cfg, _ecfg(prefix_cache=on), make_policy("sc"))
+        rounds = []
+        for _ in range(2):  # second round replays into a warm cache
+            reqs = [Request(request_id=i, prompt_tokens=p, n_traces=2,
+                            policy=make_policy("sc"))
+                    for i, p in enumerate(prompts)]
+            results = eng.serve_batch(reqs)
+            rounds.append([[t.output_tokens for t in r.traces]
+                           for r in results])
+        runs.append(rounds)
+        assert eng.pool_drained()
+        eng.block_mgr.check_invariants()
+    assert runs[0] == runs[1]
+
+
+def test_chunked_prefill_engine_hits_cache(setup):
+    """The chunked-prefill admission path must route hits too: the warm
+    suffix job starts past the cached tokens."""
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    prompt = _prompt(tok, 50)
+    eng = Engine(params, cfg, _ecfg(prefill_chunk_size=16),
+                 make_policy("sc"))
+    r1 = eng.serve(prompt, 2)
+    r2 = eng.serve(prompt, 2)
+    assert r2.metrics.cached_tokens == 3 * BS
+    assert ([t.output_tokens for t in r2.traces]
+            == [t.output_tokens for t in r1.traces])
+    assert eng.pool_drained()
+
+
+def test_eviction_under_memory_pressure(setup):
+    """A tight pool: parked blocks from an earlier request are evicted
+    LRU-first to admit a new one (evict-before-prune), and the new
+    request still completes without pruning or preemption."""
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    eng = Engine(params, cfg, _ecfg(num_blocks=6, max_new=8),
+                 make_policy("sc"))
+    ra = eng.serve(_prompt(tok, 40), 1)
+    assert all(t.status == TraceStatus.FINISHED for t in ra.traces)
+    assert eng.prefix_cache.cached_blocks == 2
+    # 5 usable blocks, 2 parked: the next 40-token prompt needs 3 + 1
+    rb = eng.serve(_prompt(tok, 40, body="9*8-7+6= "), 1)
+    assert all(t.status == TraceStatus.FINISHED for t in rb.traces)
+    assert rb.num_preemptions == 0 and rb.num_pruned == 0
+    assert eng.prefix_cache.stats.evicted_blocks >= 1
+    assert eng.pool_drained()
+    eng.block_mgr.check_invariants()
+
+
+def test_cache_disabled_never_parks(setup):
+    cfg, params, _ = setup
+    tok = get_tokenizer()
+    eng = Engine(params, cfg, _ecfg(prefix_cache=False), make_policy("sc"))
+    assert eng.prefix_cache is None
+    r1 = eng.serve(_prompt(tok, 40), 2)
+    r2 = eng.serve(_prompt(tok, 40), 2)
+    assert r2.metrics.cached_tokens == 0
+    assert ([t.output_tokens for t in r2.traces]
+            == [t.output_tokens for t in r1.traces])
+    assert eng.pool_drained()
+    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1

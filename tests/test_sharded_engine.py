@@ -192,7 +192,7 @@ def _serve(eng, requests, rng_seed):
                  prompt_tokens=list(r.prompt_tokens),
                  n_traces=r.n_traces, policy=make_policy("step"))
          for r in requests])
-    assert eng.block_mgr.free_blocks == eng.block_mgr.num_blocks - 1
+    assert eng.pool_drained()
     eng.block_mgr.check_invariants()
     return results
 
