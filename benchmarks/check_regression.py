@@ -80,6 +80,22 @@ RULES = {
         ("ttft_speedup_x", "min_ratio", 0.3),
         ("cache_on.mean_ttft_s", "max_ratio", 5.0),
     ],
+    "slo_serving": [
+        # multi-tenant scenario suite: everything completes (batch-tier
+        # SLOs degrade fan-out, they never shed whole requests here)
+        ("num_completed", "equal", None),
+        ("num_requests", "equal", None),
+        # the acceptance floor: premium (weight 3, priority 1) p99 TTFT
+        # >= 2x better than batch under the bursty mixed-tenant load
+        ("ttft_p99_ratio_low_over_high", "min_abs", 2.0),
+        # premium tier keeps its TTFT objective (local runs: 1.0)
+        ("tenants.premium.slo.ttft_attainment", "min_abs", 0.9),
+        # SLO admission control actually acted on the batch tier
+        ("degraded_traces", "min_abs", 1),
+        ("tenants.premium.ttft_s.p99", "max_ratio", 5.0),
+        ("tenants.batch.e2e_s.p99", "max_ratio", 5.0),
+        ("throughput_tok_per_s", "min_ratio", 0.2),
+    ],
     "sharded_serving": [
         # the sharded-engine contract: token-identical generations on
         # the (data=2, model=2) mesh, full-length runs on both engines

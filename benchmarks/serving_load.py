@@ -15,10 +15,19 @@ parked blocks and prefills only the fresh suffix. Emits
 ``BENCH_prefix_cache.json`` (hit rate, prefill tokens saved, TTFT
 on/off) and asserts the generated tokens are identical either way.
 
+``--slo`` runs the multi-tenant SLO scenario suite: a 10x larger
+workload (bursty arrival waves, heavy-tail prompt lengths, mixed
+single-trace "chat" and 4-trace "reasoning" requests) served to a
+premium tenant (weight 3, priority 1) and a batch tenant (weight 1,
+priority 0, degradable SLO) through the weighted-fair TenantScheduler.
+Emits ``BENCH_slo.json`` with the per-tenant TTFT/TPOT percentile and
+SLO-attainment breakdown; the regression gate requires the premium
+tenant's p99 TTFT to stay >= 2x better than the batch tenant's.
+
 Uses randomly-initialised weights (perf numbers don't need a trained
 model) so it runs in seconds on the CI CPU runners:
 
-    PYTHONPATH=src python -m benchmarks.serving_load [--multiturn]
+    PYTHONPATH=src python -m benchmarks.serving_load [--multiturn|--slo]
         [--out path.json]
 """
 from __future__ import annotations
@@ -29,6 +38,7 @@ import os
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.registry import serving_config
 from repro.core.pruning import make_policy
@@ -36,9 +46,9 @@ from repro.core.trace import TraceStatus
 from repro.data.tokenizer import get_tokenizer
 from repro.data.arithmetic import make_prompt
 from repro.models.init import init_params
-from repro.serving import (CacheStats, Engine, EngineConfig, Request,
-                           SamplingParams, make_problems, poisson_arrivals,
-                           summarize)
+from repro.serving import (SLO, CacheStats, Engine, EngineConfig, Request,
+                           SamplingParams, TenantScheduler, make_problems,
+                           poisson_arrivals, summarize, summarize_by_tenant)
 
 N_REQUESTS = 6
 N_TRACES = 4
@@ -242,16 +252,166 @@ def run_multiturn(verbose: bool = False) -> dict:
     return payload
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant SLO scenario suite (bursty waves, heavy tails, tenant mix)
+# ---------------------------------------------------------------------------
+
+SLO_WAVES = 6            # bursty arrivals: WAVES x WAVE_SIZE requests
+SLO_WAVE_SIZE = 10       # (10x the Poisson replay's request count)
+SLO_PERIOD_S = 1.2       # wave spacing — each wave lands as a burst
+SLO_SPREAD_S = 0.25      # intra-wave arrival jitter
+SLO_MAX_BATCH = 16       # decode slots: each wave oversubscribes them
+SLO_NUM_BLOCKS = 192
+SLO_CAPACITY = 256
+SLO_CHAT_MAX_NEW = 8     # per-request max_new_tokens overrides
+SLO_REASON_MAX_NEW = 16
+SLO_TENANTS = {"premium": 3.0, "batch": 1.0}
+# premium: interactive tier — strict-ish TTFT it should comfortably make
+# because priority-1 admission jumps every burst's queue. batch: best
+# effort — a tight TTFT objective it will miss under bursts, which is
+# what drives SLO admission to degrade its reasoning fan-out.
+SLO_PREMIUM = SLO(ttft_s=2.5, tpot_s=1.0)
+SLO_BATCH = SLO(ttft_s=0.8, tpot_s=1.0, min_traces=1)
+
+
+def bursty_arrivals(n: int, wave_size: int, period_s: float,
+                    spread_s: float, seed: int) -> list:
+    """Arrival offsets for bursty waves: request i lands in wave
+    i // wave_size at the wave instant plus uniform jitter — the
+    flash-crowd load shape (vs. the smooth Poisson trace)."""
+    rng = np.random.default_rng(seed)
+    return [(i // wave_size) * period_s + float(rng.uniform(0.0, spread_s))
+            for i in range(n)]
+
+
+def heavy_tail_lengths(n: int, seed: int, median: float = 24.0,
+                       sigma: float = 0.9, cap: int = 120) -> list:
+    """Log-normal filler-token counts: most prompts short, a heavy tail
+    of long-context stragglers (capped so prompts fit ``SLO_CAPACITY``)."""
+    rng = np.random.default_rng(seed)
+    return [int(min(rng.lognormal(np.log(median), sigma), cap))
+            for _ in range(n)]
+
+
+def build_slo_requests(tok):
+    n = SLO_WAVES * SLO_WAVE_SIZE
+    problems = make_problems(n, seed=SEED, n_steps=(4, 10))
+    arrivals = bursty_arrivals(n, SLO_WAVE_SIZE, SLO_PERIOD_S,
+                               SLO_SPREAD_S, seed=SEED)
+    fillers = heavy_tail_lengths(n, seed=SEED + 1)
+    # ~digit soup a char-level tokenizer maps ~1:1 to tokens; sliced per
+    # request to the sampled heavy-tail length
+    filler_ids = tok.encode("".join(f"{i % 10}+{(i + 3) % 10}= "
+                                    for i in range(64)), add_bos=False)
+    reqs = []
+    for i, (p, at, fill) in enumerate(zip(problems, arrivals, fillers)):
+        chat = i % 2 == 0           # single-trace interactive request
+        premium = i % 3 == 0        # 1/3 premium, 2/3 batch
+        prompt = tok.encode(make_prompt(p), add_bos=True)
+        prompt = prompt[:1] + filler_ids[:fill] + prompt[1:]
+        reqs.append(Request(
+            request_id=i, prompt_tokens=prompt,
+            n_traces=1 if chat else 4,
+            policy=make_policy("sc"),
+            arrival_time=at,
+            max_new_tokens=(SLO_CHAT_MAX_NEW if chat
+                            else SLO_REASON_MAX_NEW),
+            tenant="premium" if premium else "batch",
+            priority=1 if premium else 0,
+            slo=SLO_PREMIUM if premium else SLO_BATCH))
+    return reqs
+
+
+def run_slo(verbose: bool = False) -> dict:
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+    ecfg = EngineConfig(
+        max_batch=SLO_MAX_BATCH, num_blocks=SLO_NUM_BLOCKS,
+        capacity=SLO_CAPACITY, max_new_tokens=SLO_REASON_MAX_NEW,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=SLO_REASON_MAX_NEW),
+        prefill_chunk_size=PREFILL_CHUNK,
+        max_tokens_per_step=MAX_TOKENS_PER_STEP,
+        prefix_cache=False)
+    engine = Engine(params, cfg, ecfg, make_policy("sc"),
+                    scheduler=TenantScheduler(weights=SLO_TENANTS))
+
+    # jit warmup outside the timed replay
+    warm = build_slo_requests(tok)[0]
+    warm.arrival_time = 0.0
+    engine.serve_batch([warm])
+
+    requests = build_slo_requests(tok)
+    t0 = time.perf_counter()
+    results = engine.serve_batch(requests)
+    wall = time.perf_counter() - t0
+
+    assert engine.pool_drained()
+    engine.block_mgr.check_invariants()
+    metrics = [r.metrics for r in results]
+    assert all(m is not None and m.finished_s is not None for m in metrics)
+
+    overall = summarize(metrics)
+    tenants = summarize_by_tenant(metrics)
+    ratio = (tenants["batch"]["ttft_s"]["p99"]
+             / max(tenants["premium"]["ttft_s"]["p99"], 1e-9))
+    payload = {
+        "benchmark": "slo_serving",
+        "config": {
+            "n_requests": len(requests), "waves": SLO_WAVES,
+            "wave_size": SLO_WAVE_SIZE, "period_s": SLO_PERIOD_S,
+            "max_batch": SLO_MAX_BATCH, "num_blocks": SLO_NUM_BLOCKS,
+            "capacity": SLO_CAPACITY,
+            "max_tokens_per_step": MAX_TOKENS_PER_STEP,
+            "prefill_chunk_size": PREFILL_CHUNK,
+            "tenant_weights": SLO_TENANTS,
+            "premium_slo_ttft_s": SLO_PREMIUM.ttft_s,
+            "batch_slo_ttft_s": SLO_BATCH.ttft_s, "seed": SEED,
+        },
+        "wall_s": wall,
+        "num_requests": overall["num_requests"],
+        "num_completed": overall["num_completed"],
+        "total_output_tokens": overall["total_output_tokens"],
+        "throughput_tok_per_s": overall["throughput_tok_per_s"],
+        "degraded_traces": overall["degraded_traces"],
+        "num_pruned": overall["num_pruned"],
+        "ttft_p99_ratio_low_over_high": ratio,
+        "tenants": tenants,
+    }
+    if verbose:
+        print(f"slo_serving: {overall['num_completed']}"
+              f"/{overall['num_requests']} requests, "
+              f"{overall['total_output_tokens']} tokens in {wall:.2f}s "
+              f"({overall['throughput_tok_per_s']:.1f} tok/s), "
+              f"degraded_traces={overall['degraded_traces']}")
+        for name, t in tenants.items():
+            att = t["slo"]["ttft_attainment"]
+            print(f"  [{name}] n={t['num_requests']} "
+                  f"ttft p50={t['ttft_s']['p50']:.3f}s "
+                  f"p99={t['ttft_s']['p99']:.3f}s "
+                  f"ttft_slo={'n/a' if att is None else f'{att:.2f}'} "
+                  f"degraded={t['degraded_traces']}")
+        print(f"  ttft p99 batch/premium = {ratio:.2f}x")
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multiturn", action="store_true",
                     help="run the prefix-cache conversation workload "
+                         "instead of the Poisson load replay")
+    ap.add_argument("--slo", action="store_true",
+                    help="run the multi-tenant SLO scenario suite "
+                         "(bursty waves, heavy-tail prompts, tenant mix) "
                          "instead of the Poisson load replay")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.multiturn:
         payload, default_out = run_multiturn(verbose=True), \
             "BENCH_prefix_cache.json"
+    elif args.slo:
+        payload, default_out = run_slo(verbose=True), "BENCH_slo.json"
     else:
         payload, default_out = run(verbose=True), "BENCH_serving.json"
     out = os.path.abspath(args.out or os.path.join(

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import List, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -50,6 +50,13 @@ class AdmissionPressure:
     # would trigger proactive pruning the cache-off engine never does.
     cached_blocks: int = 0      # blocks parked in the prefix-cache trie
     evictable_blocks: int = 0   # parked blocks only the cache references
+    # multi-tenant view (None under the default FIFO scheduling policy):
+    # waiting traces per tenant, and each tenant's remaining weighted
+    # fair-share token deficit — a policy can prune harder for tenants
+    # that are over budget (negative deficit) before the scheduler
+    # preempts them.
+    demand_by_tenant: Optional[Mapping[str, int]] = None
+    deficit_by_tenant: Optional[Mapping[str, float]] = None
 
     @property
     def memory_utilization(self) -> float:

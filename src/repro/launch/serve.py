@@ -23,9 +23,10 @@ from __future__ import annotations
 import argparse
 from typing import Optional
 
-from repro.serving import (EngineConfig, SamplingParams, evaluate_method,
+from repro.serving import (SLO, EngineConfig, SamplingParams,
+                           TenantScheduler, evaluate_method,
                            evaluate_method_batched, make_problems,
-                           poisson_arrivals)
+                           parse_tenant_weights, poisson_arrivals)
 
 
 def parse_mesh(spec: Optional[str]):
@@ -88,6 +89,19 @@ def main():
                          "matching prefixes of later requests with zero "
                          "recompute (default: on, or the "
                          "REPRO_PREFIX_CACHE env override)")
+    ap.add_argument("--tenant-weights", default=None,
+                    metavar="NAME:W,NAME:W",
+                    help="multi-tenant serving: run the weighted-fair "
+                         "TenantScheduler with these per-tenant weights "
+                         "(e.g. 'premium:3,batch:1') and assign requests "
+                         "to the named tenants round-robin. Implies "
+                         "--batched. Default: single-tenant FIFO (or the "
+                         "REPRO_SCHED env override).")
+    ap.add_argument("--slo", default=None, metavar="TTFT[,TPOT]",
+                    help="attach a per-request SLO (seconds): TTFT "
+                         "target, optional TPOT target. The tenant "
+                         "scheduler degrades a request's n_traces when "
+                         "its projected TTFT would miss the target.")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
@@ -100,7 +114,9 @@ def main():
     from benchmarks.common import load_artifacts
     params, scorer, cfg = load_artifacts()
 
-    ecfg = EngineConfig(
+    # CLI flags override REPRO_* env vars, which override the dataclass
+    # defaults (EngineConfig.from_env resolves env < explicit overrides).
+    ecfg = EngineConfig.from_env(
         max_batch=args.traces, num_blocks=args.blocks, capacity=256,
         max_new_tokens=args.max_new,
         sampling=SamplingParams(max_new_tokens=args.max_new),
@@ -116,7 +132,24 @@ def main():
     pkw = {"warmup": max(2, args.traces // 4)} \
         if args.method == "deepconf" else {}
 
-    batched = args.batched or args.arrival_rate > 0
+    slo = None
+    if args.slo is not None:
+        parts = [float(x) for x in args.slo.split(",")]
+        slo = SLO(ttft_s=parts[0],
+                  tpot_s=parts[1] if len(parts) > 1 else None)
+    scheduler = None
+    overrides = None
+    if args.tenant_weights is not None:
+        weights = parse_tenant_weights(args.tenant_weights)
+        scheduler = TenantScheduler(weights=weights)
+        tenants = list(weights)
+        overrides = [{"tenant": tenants[i % len(tenants)], "slo": slo}
+                     for i in range(len(problems))]
+    elif slo is not None:
+        overrides = [{"slo": slo}] * len(problems)
+
+    batched = args.batched or args.arrival_rate > 0 \
+        or args.tenant_weights is not None
     if batched:
         arrivals = poisson_arrivals(len(problems), args.arrival_rate,
                                     seed=args.seed)
@@ -133,6 +166,7 @@ def main():
             args.method, params, cfg, problems, args.traces, ecfg,
             scorer_params=scorer, policy_kwargs=pkw,
             arrival_times=arrivals, on_result=on_result, mesh=mesh,
+            scheduler=scheduler, request_overrides=overrides,
             verbose=not args.stream)
     else:
         res = evaluate_method(args.method, params, cfg, problems,
@@ -151,6 +185,14 @@ def main():
               f"e2e p50={s['e2e_s']['p50']:.2f}s "
               f"p99={s['e2e_s']['p99']:.2f}s | "
               f"throughput={s['throughput_tok_per_s']:.1f} tok/s")
+        if s.get("slo", {}).get("requests_with_slo"):
+            slo_s = s["slo"]
+            att = {k: ("n/a" if slo_s[k] is None else f"{slo_s[k]:.2f}")
+                   for k in ("ttft_attainment", "tpot_attainment")}
+            print(f"[slo] requests={slo_s['requests_with_slo']} "
+                  f"ttft_attainment={att['ttft_attainment']} "
+                  f"tpot_attainment={att['tpot_attainment']} "
+                  f"degraded_traces={s['degraded_traces']}")
 
 
 if __name__ == "__main__":

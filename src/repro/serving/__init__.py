@@ -4,10 +4,19 @@ from repro.serving.evaluate import (EvalResult, evaluate_method,
                                     evaluate_method_batched, make_problems,
                                     poisson_arrivals)
 from repro.serving.kv_manager import BlockManager, Reservation
-from repro.serving.metrics import RequestMetrics, percentiles, summarize
+from repro.serving.metrics import (RequestMetrics, percentiles, summarize,
+                                   summarize_by_tenant)
 from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.queue import RequestQueue
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import (SamplingParams, sample_tokens,
+                                    sample_tokens_lanes)
+from repro.serving.scheduler import (SLO, Arrival, BudgetReplenish,
+                                     BurstDone, ChunkDone, Completion,
+                                     DeficitRoundRobin, Event, FIFOPolicy,
+                                     SchedulerCore, SchedulingPolicy,
+                                     TenantScheduler, TokenBudget,
+                                     WeightedTokenBudget, default_scheduler,
+                                     parse_tenant_weights)
 
 __all__ = [
     "Engine", "EngineConfig", "Request", "RequestResult",
@@ -16,6 +25,11 @@ __all__ = [
     "make_problems", "poisson_arrivals",
     "BlockManager", "Reservation", "RequestQueue",
     "PrefixCache", "CacheStats",
-    "RequestMetrics", "percentiles", "summarize",
-    "SamplingParams", "sample_tokens",
+    "RequestMetrics", "percentiles", "summarize", "summarize_by_tenant",
+    "SamplingParams", "sample_tokens", "sample_tokens_lanes",
+    "SLO", "SchedulerCore", "SchedulingPolicy", "FIFOPolicy",
+    "TenantScheduler", "DeficitRoundRobin", "TokenBudget",
+    "WeightedTokenBudget", "default_scheduler", "parse_tenant_weights",
+    "Event", "Arrival", "BudgetReplenish", "ChunkDone", "BurstDone",
+    "Completion",
 ]

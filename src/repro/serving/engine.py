@@ -98,12 +98,19 @@ from repro.models.model import (copy_kv_block, forward_full,
                                 init_decode_cache, multi_decode_step,
                                 prefill_chunk_step, supports_chunked_prefill,
                                 write_prefill_kv)
-from repro.serving.kv_manager import BlockManager, Reservation
+from repro.serving.kv_manager import BlockManager
 from repro.serving.metrics import RequestMetrics
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.queue import RequestQueue
 from repro.serving.sampling import (SamplingParams, sample_logits,
-                                    sample_tokens)
+                                    sample_logits_lanes, sample_tokens,
+                                    sample_tokens_lanes)
+from repro.serving.scheduler import (SLO, ReqState, SchedulerCore,
+                                     SchedulingPolicy, SharedPrefix,
+                                     default_scheduler)
+
+# Back-compat aliases: these lived here before the scheduler split.
+_SharedPrefix = SharedPrefix
+_ReqState = ReqState
 
 
 def _default_use_kernel():
@@ -223,6 +230,47 @@ class EngineConfig:
     # pre-allocation never starves waiting work.
     decode_horizon: int = 1
 
+    # env var -> (field, parser); the single documented source of truth
+    # for engine configuration from the environment (REPRO_USE_KERNEL
+    # and REPRO_PREFIX_CACHE additionally act as dataclass defaults so
+    # the CI lanes flip whole test suites without touching call sites).
+    _ENV_FIELDS = {
+        "REPRO_MAX_BATCH": ("max_batch", int),
+        "REPRO_NUM_BLOCKS": ("num_blocks", int),
+        "REPRO_CAPACITY": ("capacity", int),
+        "REPRO_MAX_NEW_TOKENS": ("max_new_tokens", int),
+        "REPRO_SEED": ("seed", int),
+        "REPRO_PREFILL_CHUNK": ("prefill_chunk_size", int),
+        "REPRO_MAX_TOKENS_PER_STEP": ("max_tokens_per_step", int),
+        "REPRO_DECODE_HORIZON": ("decode_horizon", int),
+    }
+
+    @classmethod
+    def from_env(cls, **overrides) -> "EngineConfig":
+        """Build an ``EngineConfig`` from ``REPRO_*`` environment
+        variables, with explicit keyword ``overrides`` taking
+        precedence over the environment, which takes precedence over
+        the dataclass defaults.
+
+        Scalar fields read ``REPRO_MAX_BATCH``, ``REPRO_NUM_BLOCKS``,
+        ``REPRO_CAPACITY``, ``REPRO_MAX_NEW_TOKENS``, ``REPRO_SEED``,
+        ``REPRO_PREFILL_CHUNK``, ``REPRO_MAX_TOKENS_PER_STEP`` and
+        ``REPRO_DECODE_HORIZON``; ``REPRO_USE_KERNEL`` /
+        ``REPRO_PREFIX_CACHE`` keep their existing semantics (they are
+        the dataclass default factories, so they apply to plain
+        ``EngineConfig()`` construction too). This is what
+        ``launch/serve.py``, ``evaluate_method(_batched)`` and the
+        benchmarks build their configs through — one documented source
+        of truth instead of scattered ``os.environ`` reads.
+        """
+        kwargs = {}
+        for env_name, (field, parse) in cls._ENV_FIELDS.items():
+            raw = os.environ.get(env_name, "").strip()
+            if raw:
+                kwargs[field] = parse(raw)
+        kwargs.update(overrides)
+        return cls(**kwargs)
+
 
 @dataclasses.dataclass
 class Request:
@@ -238,12 +286,35 @@ class Request:
     warmup threshold, Slim-SC's check cursor) and requests run
     concurrently. When left None in a multi-request batch, the engine
     deep-copies its default policy per request for the same reason.
+
+    Per-request generation overrides: ``sampling`` (a
+    ``SamplingParams``) and ``max_new_tokens`` replace the engine-global
+    ``EngineConfig.sampling`` / ``EngineConfig.max_new_tokens`` for this
+    request only; ``None`` (the default) inherits the engine values, so
+    existing callers are untouched. A batch where every request inherits
+    the engine sampling runs the scalar decode path unchanged; any
+    override flips that serve call onto the lane-wise sampling path
+    (identical math per lane — see ``sampling.sample_logits_lanes``).
+
+    Multi-tenant serving (consumed by ``scheduler.TenantScheduler``;
+    inert under the default FIFO policy): ``tenant`` names the fair-share
+    account the request's tokens are charged to, ``priority`` orders
+    admission across tenants (higher first), and ``slo`` attaches a
+    per-request ``scheduler.SLO`` — admission may degrade ``n_traces``
+    toward ``slo.min_traces`` (test-time-scaling quality as the latency
+    dial) or shed the request when its projected TTFT violates the
+    objective.
     """
     request_id: int
     prompt_tokens: List[int]
     n_traces: int
     policy: Optional[PruningPolicy] = None
     arrival_time: float = 0.0
+    sampling: Optional[SamplingParams] = None
+    max_new_tokens: Optional[int] = None
+    tenant: str = "default"
+    priority: int = 0
+    slo: Optional[SLO] = None
 
 
 @dataclasses.dataclass
@@ -263,143 +334,6 @@ class RequestResult:
     peak_blocks_used: int = 0
     metrics: Optional[RequestMetrics] = None
 
-
-@dataclasses.dataclass
-class _SharedPrefix:
-    """Per-request artifact of the one-shot prompt prefill."""
-    blocks: List[int]           # holder's own references (freed at req end)
-    seq_len: int
-    last_logits: jax.Array      # [1, Vp] vocab-masked last-position logits
-    slot_state: Optional[tuple]  # (ssm, conv) end state for ssm/hybrid
-
-
-class _ReqState:
-    """Scheduler-side bookkeeping for one in-flight request."""
-
-    def __init__(self, req: Request, policy: PruningPolicy,
-                 traces: List[Trace]):
-        self.req = req
-        self.policy = policy
-        self.traces = traces
-        self.prefix: Optional[_SharedPrefix] = None
-        self.prefill_s = 0.0
-        self.decode_s = 0.0
-        self.t_done: Optional[float] = None
-        self.warmup_recorded = not isinstance(policy, DeepConfPolicy)
-        # prefix-cache accounting: one probe per request; a hit holds
-        # forked block references until a _PrefillJob takes them over
-        self.cache_probed = False
-        self.cache_hit: Optional[Tuple[List[int], int]] = None
-        self.cached_tokens = 0
-        # online-serving timestamps (absolute perf_counter seconds)
-        self.arrived = False
-        self.admit_t: Optional[float] = None
-        self.first_token_t: Optional[float] = None
-        self.result: Optional[RequestResult] = None
-
-    @property
-    def request_id(self) -> int:
-        return self.req.request_id
-
-    def note_first_token(self) -> None:
-        if self.first_token_t is None:
-            self.first_token_t = time.perf_counter()
-
-    def admissible(self, trace: Trace) -> bool:
-        """DeepConf online: traces beyond the warmup set wait until the
-        warmup traces finished and the threshold exists."""
-        if self.warmup_recorded:
-            return True
-        return trace.trace_id < self.policy.warmup
-
-    def update_gate(self) -> None:
-        if self.warmup_recorded:
-            return
-        warm = self.traces[:self.policy.warmup]
-        if all(not t.alive for t in warm):
-            self.policy.record_warmup(
-                [t for t in warm if t.status == TraceStatus.FINISHED])
-            self.warmup_recorded = True
-
-    def done(self) -> bool:
-        return all(not t.alive for t in self.traces)
-
-
-class _PrefillJob:
-    """An in-flight chunked prompt prefill (shared-prefix path).
-
-    Holds a chunk-granular block reservation: blocks already taken carry
-    completed chunks' KV; the job draws more as chunks land and commits
-    the full set into the request's ``_SharedPrefix`` when the prompt is
-    exhausted. ``abort`` (memory pressure) returns every block; the
-    prefill restarts from scratch on the next admission attempt.
-
-    A prefix-cache hit seeds the job with ``base_blocks`` (forked cached
-    blocks covering the first ``base_tokens`` prompt tokens): the prefill
-    starts at ``pos = base_tokens`` and only computes the suffix. Chunk
-    boundaries stay on the absolute ``chunk``-token grid so the suffix
-    chunks are the exact chunks a cold prefill would have run. ``eager``
-    jobs (cache hit on an engine configured for one-shot prefill) run
-    all their chunks in one tick instead of interleaving with decode.
-    """
-
-    def __init__(self, st: _ReqState, reservation: Reservation,
-                 blocks_per_seq: int, chunk: int,
-                 base_blocks: Sequence[int] = (), base_tokens: int = 0,
-                 eager: bool = False):
-        self.st = st
-        self.tokens: List[int] = list(st.req.prompt_tokens)
-        self.pos = base_tokens
-        self.chunk = chunk
-        self.eager = eager
-        self.base: List[int] = list(base_blocks)
-        self.res = reservation
-        self.row = np.zeros((blocks_per_seq,), np.int32)
-        self.row[:len(self.base)] = self.base
-        self.last_logits = None
-
-    @property
-    def request_id(self) -> int:
-        return self.st.request_id
-
-    @property
-    def done(self) -> bool:
-        return self.pos >= len(self.tokens)
-
-    def abort(self) -> None:
-        self.res.abort()
-        if self.base:
-            # drop the forked cache references; the cached blocks stay
-            # parked in the trie. The restart prefills from scratch, so
-            # the request's hit accounting is rolled back too.
-            self.res.mgr.free(self.base)
-            self.base = []
-            self.st.cached_tokens = 0
-
-
-class _TokenBudget:
-    """Per-tick token budget (``EngineConfig.max_tokens_per_step``).
-
-    Decode consumes one token per running trace before prefill work is
-    scheduled; ``spend`` charges prefill tokens when they are computed.
-    ``force`` lets ``can`` approve the tick's first prefill even beyond
-    the limit when nothing is decoding — otherwise a prompt longer than
-    the budget could never start.
-    """
-
-    def __init__(self, limit: Optional[int]):
-        self.left = limit  # None = unlimited
-        self.spent_any = False
-
-    def can(self, n_tokens: int, force: bool = False) -> bool:
-        if self.left is None or self.left >= n_tokens:
-            return True
-        return force and not self.spent_any
-
-    def spend(self, n_tokens: int) -> None:
-        self.spent_any = True
-        if self.left is not None:
-            self.left = max(self.left - n_tokens, 0)
 
 
 class Engine:
@@ -425,13 +359,20 @@ class Engine:
     def __init__(self, params: dict, cfg: ModelConfig, ecfg: EngineConfig,
                  policy: PruningPolicy,
                  scorer_params: Optional[dict] = None,
-                 mesh=None):
+                 mesh=None,
+                 scheduler: Optional[SchedulingPolicy] = None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.policy = policy
         self.scorer_params = scorer_params
         self.mesh = mesh
+        # scheduling policy (admission order, token budgets, SLO
+        # admission, preemption victims). None -> REPRO_SCHED env
+        # default (unset = the FIFO policy, which reproduces the
+        # pre-scheduler-core tick loop exactly).
+        self.scheduler = (scheduler if scheduler is not None
+                          else default_scheduler())
         self.tok = get_tokenizer()
         bs = cfg.kv_block_size
         self.blocks_per_seq = -(-ecfg.capacity // bs)
@@ -456,6 +397,8 @@ class Engine:
         # ticks where admission pressure forced the horizon down to 1
         # (observable for tests/benchmarks)
         self.horizon_fallbacks = 0
+        # tail of the last serve_batch's scheduler event stream
+        self.last_event_log: list = []
         self._ss = None  # serving step shardings (mesh engines only)
         if mesh is not None:
             self._place_on_mesh()
@@ -531,7 +474,7 @@ class Engine:
         eos_id = self.tok.eos_id
         step_id = self.tok.step_id
 
-        def sample_fn(key, logits):
+        def mask_and_gather(logits):
             logits = logits.at[:, V:].set(-jnp.inf)
             if ss is not None:
                 # The sampling math must never shard the vocab axis: the
@@ -543,11 +486,20 @@ class Engine:
                 # single-device sampler bit-for-bit.
                 logits = jax.lax.with_sharding_constraint(
                     logits, ss["replicated"])
+            return logits
+
+        def sample_fn(key, logits):
+            logits = mask_and_gather(logits)
             return sample_logits(key, logits, temperature=sp.temperature,
                                  top_k=sp.top_k, top_p=sp.top_p)
 
-        def make_decode(horizon):
-            """Fused K-iteration decode; one jit instance per horizon."""
+        def make_decode(horizon, lanewise=False):
+            """Fused K-iteration decode; one jit instance per (horizon,
+            lanewise). The lane-wise variant takes per-lane
+            temperature/top-k/top-p arrays as traced arguments (the
+            per-request sampling path); the scalar variant bakes the
+            engine-global ``SamplingParams`` into the graph and is the
+            only one built for batches with no overrides."""
             jit_kw = {}
             if ss is not None:
                 # pin the round-trip layouts: per-lane [B, K] bursts and
@@ -560,11 +512,22 @@ class Engine:
 
             @partial(jax.jit, donate_argnums=(1,), **jit_kw)
             def batched_decode(params, cache, tokens, positions, limits,
-                               block_tables, rng, scorer_params):
+                               block_tables, rng, scorer_params, *samp):
                 cache = dict(cache)
                 cache["block_tables"] = block_tables
                 score_fn = ((lambda h: scorer_score(scorer_params, h))
                             if has_scorer else None)
+                if lanewise:
+                    temps, topks, topps = samp
+
+                    def lane_sample_fn(key, logits):
+                        logits = mask_and_gather(logits)
+                        return sample_logits_lanes(key, logits, temps,
+                                                   topks, topps)
+
+                    step_sample_fn = lane_sample_fn
+                else:
+                    step_sample_fn = sample_fn
                 # derive the per-iteration keys in-graph, exactly as K
                 # successive host-side ticks would (rng, k = split(rng)
                 # per token) — one device call replaces K split
@@ -576,7 +539,7 @@ class Engine:
                 out = multi_decode_step(
                     params, cfg, tokens, positions, limits, cache,
                     window_len=ecfg.capacity, horizon=horizon,
-                    rng_keys=jnp.stack(keys), sample_fn=sample_fn,
+                    rng_keys=jnp.stack(keys), sample_fn=step_sample_fn,
                     eos_id=eos_id, step_id=step_id, score_fn=score_fn,
                     scratch_block=self.block_mgr.scratch_block,
                     use_kernel=self.use_kernel, shard_specs=ss)
@@ -588,11 +551,14 @@ class Engine:
 
             return batched_decode
 
-        self._decode = make_decode(ecfg.decode_horizon)
+        self._make_decode = make_decode
+        self._decode_fns: Dict[Tuple[int, bool], Callable] = {}
+        self._decode_fns[(ecfg.decode_horizon, False)] = make_decode(
+            ecfg.decode_horizon)
         # pressure-fallback path: single-token ticks while waiting work
         # contends for a short free list (same instance when K == 1)
-        self._decode_single = (self._decode if ecfg.decode_horizon == 1
-                               else make_decode(1))
+        if (1, False) not in self._decode_fns:
+            self._decode_fns[(1, False)] = make_decode(1)
 
         pf_kv = None if ss is None else self._prefill_kv_specs
         pf_act = None if ss is None else ss["prefill_act"]
@@ -662,6 +628,58 @@ class Engine:
         cb_kw = {} if ss is None else {"out_shardings": ss["pools"]}
         self._copy_block = jax.jit(partial(copy_kv_block, cfg),
                                    donate_argnums=(0,), **cb_kw)
+
+    def decode_fn(self, horizon: int, lanewise: bool = False) -> Callable:
+        """The fused decode step for ``(horizon, lanewise)``. Scalar
+        instances for the configured horizon (and its K=1 pressure
+        fallback) are built at construction; lane-wise instances (the
+        per-request sampling path) compile lazily on the first serve
+        call whose batch carries a sampling override."""
+        key = (horizon, lanewise)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            fn = self._decode_fns[key] = self._make_decode(horizon,
+                                                           lanewise)
+        return fn
+
+    # ------------------------------------------------------------------
+    # host-side sampling (prefill first tokens)
+    # ------------------------------------------------------------------
+    def sample_host(self, logits, sp: SamplingParams):
+        """Sample one token per row of ``logits`` with scalar params,
+        consuming one split of the engine RNG stream (exactly what the
+        pre-refactor tick loop did — the identity pins depend on this
+        key-consumption order)."""
+        self._rng, k = jax.random.split(self._rng)
+        return sample_tokens(k, logits, temperature=sp.temperature,
+                             top_k=sp.top_k, top_p=sp.top_p)
+
+    def sample_host_lanes(self, logits, sps: Sequence[SamplingParams]):
+        """Per-row sampling params (mixed-sampling admission waves);
+        same single RNG split as ``sample_host``."""
+        self._rng, k = jax.random.split(self._rng)
+        temps = jnp.asarray([s.temperature for s in sps], jnp.float32)
+        topks = jnp.asarray([s.top_k for s in sps], jnp.int32)
+        topps = jnp.asarray([s.top_p for s in sps], jnp.float32)
+        return sample_tokens_lanes(k, logits, temps, topks, topps)
+
+    # ------------------------------------------------------------------
+    # KV pool handoff (scheduler core <-> persistent prefix-cache pool)
+    # ------------------------------------------------------------------
+    def _take_kv_cache(self) -> dict:
+        """Hand the device KV pool to a scheduler run. With the prefix
+        cache on, the pool persists across serve calls (parked blocks
+        keep their KV); ownership transfers because the first jitted
+        step donates the buffers, so no second reference may survive."""
+        if self.prefix_cache is not None and self._kv_cache is not None:
+            cache, self._kv_cache = self._kv_cache, None
+            return cache
+        return self._init_cache()
+
+    def _stash_kv_cache(self, cache: dict) -> None:
+        """Keep parked KV live for the next serve call (cache on)."""
+        if self.prefix_cache is not None:
+            self._kv_cache = cache
 
     # ------------------------------------------------------------------
     # pool accounting
@@ -793,7 +811,7 @@ class Engine:
         order, as before.
         """
         t_start = time.perf_counter()
-        states: List[_ReqState] = []
+        states: List[ReqState] = []
         for req in requests:
             if req.policy is not None:
                 policy = req.policy
@@ -809,9 +827,20 @@ class Engine:
             traces = [Trace(trace_id=i, request_id=req.request_id,
                             prompt_tokens=list(req.prompt_tokens))
                       for i in range(req.n_traces)]
-            states.append(_ReqState(req, policy, traces))
+            states.append(ReqState(
+                req, policy, traces,
+                sampling=(req.sampling if req.sampling is not None
+                          else self.ecfg.sampling),
+                max_new_tokens=(req.max_new_tokens
+                                if req.max_new_tokens is not None
+                                else self.ecfg.max_new_tokens)))
 
-        peak_blocks = self._run_scheduler(states, t_start, on_complete)
+        core = SchedulerCore(self, states, t_start, on_complete,
+                             sched=self.scheduler)
+        peak_blocks = core.run()
+        # tail of the event stream (bounded deque), for observability
+        # and the event-ordering tests
+        self.last_event_log = list(core.event_log)
 
         t_end = time.perf_counter()
         results = []
@@ -845,7 +874,14 @@ class Engine:
             num_pruned=num_pruned,
             num_preemptions=num_preempt,
             wait_s=wait_s, prefill_s=st.prefill_s, decode_s=st.decode_s,
-            cached_tokens=st.cached_tokens)
+            cached_tokens=st.cached_tokens,
+            tenant=getattr(st.req, "tenant", "default"),
+            priority=getattr(st.req, "priority", 0),
+            degraded_traces=st.degraded_traces,
+            slo_ttft_s=(st.req.slo.ttft_s if st.req.slo is not None
+                        else None),
+            slo_tpot_s=(st.req.slo.tpot_s if st.req.slo is not None
+                        else None))
         return RequestResult(
             request_id=st.request_id, answer=answer, traces=st.traces,
             latency_s=done - t_start,
@@ -857,790 +893,3 @@ class Engine:
             peak_blocks_used=peak_blocks,
             metrics=metrics)
 
-    # ------------------------------------------------------------------
-    def _run_scheduler(self, states: List[_ReqState], t_start: float,
-                       on_complete: Optional[Callable[[RequestResult], None]]
-                       = None) -> int:
-        """Tick loop: arrivals -> admission/chunked prefill -> COW/frontier
-        block assurance -> batched decode -> prune/preempt. Runs every
-        request's traces to completion/pruning. Returns the pool-wide
-        peak block usage."""
-        ecfg, cfg, tok = self.ecfg, self.cfg, self.tok
-        B = ecfg.max_batch
-        bs = cfg.kv_block_size
-        cap = ecfg.capacity
-        share = ecfg.share_prompt_prefix
-        chunk = ecfg.prefill_chunk_size if self._chunk_supported else None
-        mgr = self.block_mgr
-        pcache = self.prefix_cache
-        if pcache is not None and self._kv_cache is not None:
-            # persistent pool: parked blocks keep their KV across batches.
-            # Take ownership — the first jitted step donates the buffers,
-            # so no second reference may survive.
-            cache, self._kv_cache = self._kv_cache, None
-        else:
-            cache = self._init_cache()
-        by_req: Dict[int, _ReqState] = {st.request_id: st for st in states}
-        assert len(by_req) == len(states), "duplicate request_id in batch"
-
-        pending = RequestQueue([st.req for st in states])
-        started: List[_ReqState] = []
-
-        block_tables = np.zeros((B, self.blocks_per_seq), np.int32)
-        positions = np.zeros((B,), np.int32)
-        cur_tokens = np.zeros((B,), np.int32)
-        # Device-resident mirrors of the decode-state arrays. The host
-        # copies above stay authoritative for scheduling math; the device
-        # copies are re-uploaded only when a host-side event (admission,
-        # COW/frontier repoint, release) dirties them. In steady-state
-        # decode the fused step hands back next-tick tokens/positions as
-        # device arrays, so nothing round-trips through jnp.asarray.
-        dev = {"tokens": None, "positions": None, "block_tables": None}
-        dirty = {"tokens": True, "positions": True, "block_tables": True}
-        K_cfg = ecfg.decode_horizon
-        free_slots = list(range(B))
-        running: List[Trace] = []
-        waiting: List[Trace] = []
-        jobs: Dict[int, _PrefillJob] = {}  # request_id -> in-flight prefill
-
-        peak_blocks = 0
-        idle_ticks = 0  # consecutive no-progress ticks (deadlock guard)
-
-        def note_peak():
-            nonlocal peak_blocks
-            peak_blocks = max(peak_blocks, mgr.used_blocks)
-
-        def admit_arrivals(now_rel: float):
-            for req in pending.pop_arrived(now_rel):
-                st = by_req[req.request_id]
-                st.arrived = True
-                started.append(st)
-                for t in st.traces:
-                    t.status = TraceStatus.WAITING
-                    # wait_time counts only MEMORY-induced waiting (paper
-                    # Table 3): the clock starts at preemption or at a
-                    # memory-blocked admission attempt, not at arrival.
-                    t.runnable_since = -1.0
-                waiting.extend(st.traces)
-
-        def release_prefix(st: _ReqState, park: bool = True):
-            """Drop the request's shared-prefix holder references. With
-            the prefix cache on, the prompt's full blocks are parked in
-            the trie for cross-request reuse instead of freed; the
-            partial tail block (written by this request's own prefill)
-            is never shared and always returns to the pool. ``park=False``
-            (memory reclaim) frees everything outright."""
-            if st.prefix is None:
-                return
-            blocks, n_tok = st.prefix.blocks, st.prefix.seq_len
-            st.prefix = None
-            if park and pcache is not None and n_tok >= bs:
-                n_full = n_tok // bs
-                pcache.insert(st.req.prompt_tokens, blocks[:n_full])
-                if blocks[n_full:]:
-                    mgr.free(blocks[n_full:])
-            else:
-                mgr.free(blocks)
-
-        def evict_for(n: int) -> bool:
-            """Free-list headroom for ``n`` blocks, reclaiming LRU
-            prefix-cache blocks on demand — parked KV is the cheapest
-            memory in the pool (a reuse opportunity, not live compute),
-            so it always goes before any trace is pruned/preempted."""
-            if mgr.can_allocate(n):
-                return True
-            if pcache is not None:
-                pcache.evict(n - mgr.free_blocks)
-            return mgr.can_allocate(n)
-
-        def release(trace: Trace, status: TraceStatus):
-            nonlocal cache
-            if trace.blocks:
-                mgr.free(trace.blocks)
-                trace.blocks = []
-            if trace.batch_slot >= 0:
-                s = trace.batch_slot
-                block_tables[s, :] = mgr.scratch_block
-                positions[s] = 0
-                dirty["block_tables"] = dirty["positions"] = True
-                cache = self._clear_slot_state(cache, s)
-                free_slots.append(s)
-                trace.batch_slot = -1
-            trace.status = status
-            if trace in running:
-                running.remove(trace)
-            st = by_req[trace.request_id]
-            if st.done():
-                release_prefix(st)
-                if st.t_done is None:
-                    st.t_done = time.perf_counter()
-                if st.result is None:
-                    st.result = self._finalize(st, t_start,
-                                               st.t_done, peak_blocks)
-                    if on_complete is not None:
-                        on_complete(st.result)
-
-        def reclaim_idle_prefix(skip_rid: int) -> bool:
-            """Free shared-prefix blocks of requests with no running
-            trace (their waiting traces recompute on readmission). Never
-            touches ``skip_rid``: freeing the needy request's own prefix
-            would report progress while undoing its admission work (an
-            admit/prefill livelock)."""
-            before = mgr.free_blocks
-            live = {t.request_id for t in running}
-            live.add(skip_rid)
-            for st in started:
-                if st.prefix is not None and st.request_id not in live:
-                    # reclaim must FREE, not park: parking would report
-                    # no free-list progress and fall through to
-                    # preemption with reusable blocks still held
-                    release_prefix(st, park=False)
-            return mgr.free_blocks > before
-
-        def abort_other_jobs(skip_rid: int) -> bool:
-            """Cancel other requests' in-flight chunked prefills, freeing
-            their partially-reserved blocks (they restart later). Only
-            the decode path calls this — admission-time aborts could
-            livelock two prefilling requests against each other."""
-            freed = False
-            for rid in list(jobs):
-                if rid != skip_rid and jobs[rid].res.num_taken > 0:
-                    jobs.pop(rid).abort()
-                    freed = True
-            return freed
-
-        def current_pressure() -> AdmissionPressure:
-            return AdmissionPressure(
-                waiting_traces=len(waiting),
-                queued_requests=len(pending),
-                free_blocks=mgr.free_blocks,
-                total_blocks=ecfg.num_blocks - 1,
-                cached_blocks=(pcache.cached_blocks
-                               if pcache is not None else 0),
-                evictable_blocks=(pcache.evictable_blocks
-                                  if pcache is not None else 0))
-
-        def handle_memory_full(needy: Optional[Trace], rid: int,
-                               at_admission: bool = False) -> bool:
-            """Pool has no free block. Returns True if progress was made.
-
-            STEP: the needy request's policy prunes its lowest-scored
-            running trace, freeing its blocks — the waiting queue never
-            forms.
-            Baselines: at admission the new trace simply WAITS (vLLM does
-            not evict running work for new arrivals); mid-decode, the
-            last-arrived running trace (any request) is PREEMPTED
-            (discard-and-recompute) into the waiting queue.
-            """
-            # evict-before-prune: LRU cache-only blocks are reclaimed
-            # before any live trace is touched. This ordering is what
-            # keeps cache-on scheduling a superset of cache-off headroom
-            # (the cache can only ADD free-able memory, never displace a
-            # trace that would have run with the cache off).
-            if pcache is not None and pcache.evict(1):
-                return True
-            st = by_req[rid]
-            own_running = [t for t in running if t.request_id == rid]
-            victim = st.policy.on_memory_full(own_running,
-                                              pressure=current_pressure())
-            if victim is not None:  # STEP prune
-                if len(own_running) <= 1 and needy is victim:
-                    # sole survivor: finish (truncate) instead of self-prune
-                    finish(victim)
-                    return True
-                release(victim, TraceStatus.PRUNED)
-                return True
-            if reclaim_idle_prefix(skip_rid=rid):
-                return True
-            if at_admission or not running:
-                return False  # baseline: queue the arrival, keep decoding
-            if abort_other_jobs(skip_rid=rid):
-                return True
-            # vLLM preemption: lowest-priority = last-arrived running trace
-            victim = running[-1]
-            if victim is needy and len(running) == 1:
-                # lone trace cannot be preempted to help itself: truncate
-                finish(victim)
-                return True
-            if victim is needy:
-                victim = running[-2]
-            release(victim, TraceStatus.PREEMPTED)
-            victim.runnable_since = time.perf_counter()
-            waiting.append(victim)
-            return True
-
-        def finish(trace: Trace):
-            text = tok.decode(trace.output_tokens)
-            trace.answer = extract_answer(text)
-            release(trace, TraceStatus.FINISHED)
-
-        def owns_write_block(trace: Trace, bidx: int) -> bool:
-            return (bidx < len(trace.blocks)
-                    and not mgr.is_shared(trace.blocks[bidx]))
-
-        def claim_write_block(trace: Trace, bidx: int) -> None:
-            """Make ``trace`` the exclusive owner of its write block at
-            ``bidx``: a fresh block at the growth frontier, or a COW
-            copy of a still-shared (prompt) block — the first private
-            write, or a window wrap re-entering shared blocks. The
-            caller has ensured a free block exists."""
-            nonlocal cache
-            blk = mgr.allocate(1)
-            note_peak()
-            if bidx < len(trace.blocks):
-                old = trace.blocks[bidx]
-                cache = self._copy_block(cache, old, blk[0])
-                mgr.free([old])
-                trace.blocks[bidx] = blk[0]
-            else:
-                trace.blocks.extend(blk)
-            block_tables[trace.batch_slot, bidx] = blk[0]
-            dirty["block_tables"] = True
-
-        def frontier_walk(trace: Trace, k_tick: int):
-            """Yield (token offset j, block index) over ``trace``'s
-            next-``k_tick``-token write window, beyond the next token
-            (whose block the COW/grow pass already guarantees)."""
-            p = int(positions[trace.batch_slot])
-            want = min(k_tick,
-                       max(ecfg.max_new_tokens - trace.num_tokens, 1))
-            for j in range(1, want):
-                yield j, ((p + j) % cap) // bs
-
-        def extend_frontier(trace: Trace, k_tick: int) -> int:
-            """Secure exclusively-owned write blocks for up to
-            ``k_tick`` upcoming tokens of one trace. Best-effort: a
-            short free list shortens the lane's horizon, it never
-            triggers pruning/preemption."""
-            secured = 1
-            for j, bidx in frontier_walk(trace, k_tick):
-                if not owns_write_block(trace, bidx):
-                    if not evict_for(1):
-                        break
-                    claim_write_block(trace, bidx)
-                secured = j + 1
-            return secured
-
-        def start_wait_clock(st: _ReqState):
-            """Memory-blocked before admission: start the WAIT clock of
-            the request's next admissible trace (mirrors the one-shot
-            path, which stamps the admitting trace)."""
-            for t in st.traces:
-                if t.status == TraceStatus.WAITING and t in waiting:
-                    if t.runnable_since < 0:
-                        t.runnable_since = time.perf_counter()
-                    return
-
-        def advance_job(job: _PrefillJob, budget: _TokenBudget) -> str:
-            """Run prefill chunks for one job within the tick budget.
-
-            Returns "ready" (prefix complete), "budget" (tick budget or
-            interleave cap reached), or "memory" (blocked on blocks with
-            no reclaimable progress).
-            """
-            nonlocal cache
-            st = job.st
-            L = len(job.tokens)
-            C = job.chunk
-            base_n = len(job.base)
-            while not job.done:
-                # stay on the absolute C-token chunk grid: a cache-hit
-                # suffix (pos starts at base_tokens) runs the exact
-                # chunks a cold prefill of this prompt would have run
-                c = min(C - job.pos % C, L - job.pos)
-                if not budget.can(c, force=not running):
-                    return "budget"
-                need_total = mgr.blocks_for_tokens(job.pos + c)
-                need_new = need_total - base_n - job.res.num_taken
-                while need_new > 0:
-                    got = job.res.take(need_new)
-                    if got is not None:
-                        note_peak()
-                        start = base_n + job.res.num_taken - len(got)
-                        job.row[start : base_n + job.res.num_taken] = got
-                        break
-                    start_wait_clock(st)
-                    if not handle_memory_full(None, st.request_id,
-                                              at_admission=True):
-                        return "memory"
-                t_pf = time.perf_counter()
-                toks = np.zeros((1, C), np.int32)
-                toks[0, :c] = job.tokens[job.pos : job.pos + c]
-                pos_arr = job.pos + np.arange(C, dtype=np.int32)[None, :]
-                valid = (np.arange(C, dtype=np.int32)[None, :] < c)
-                logits, cache = self._chunk_prefill(
-                    self.params, cache, jnp.asarray(toks),
-                    jnp.asarray(pos_arr), jnp.asarray(valid),
-                    jnp.asarray(job.row[None, :], jnp.int32))
-                job.last_logits = logits[:, c - 1]
-                job.pos += c
-                budget.spend(c)
-                st.prefill_s += time.perf_counter() - t_pf
-                if running and not job.eager:
-                    # interleave: while traces decode, at most one chunk
-                    # per tick so prefill never stalls the decode batch
-                    break
-            if job.done:
-                base, job.base = job.base, []
-                st.prefix = _SharedPrefix(
-                    blocks=base + job.res.commit(), seq_len=L,
-                    last_logits=job.last_logits, slot_state=None)
-                jobs.pop(st.request_id, None)
-                return "ready"
-            return "budget"
-
-        def ensure_prefix(st: _ReqState, trace: Trace,
-                          budget: _TokenBudget) -> Optional[bool]:
-            """Build the request's shared prompt prefill on demand
-            (one-shot path; the chunked path goes through _PrefillJob).
-
-            True: prefix ready. False: memory action made progress, retry
-            admission. None: memory full and nothing to free — queue.
-            """
-            nonlocal cache
-            if st.prefix is not None:
-                return True
-            seq_len = len(trace.prompt_tokens)
-            need = mgr.blocks_for_tokens(seq_len)
-            # need + 1: the admitting trace's first private (COW) block
-            # must fit too, or the headroom check right after us fails
-            # and the just-computed prefill is wasted (worst case: an
-            # endless build/reclaim/rebuild cycle)
-            if not evict_for(need + 1):
-                if trace.runnable_since < 0:
-                    trace.runnable_since = time.perf_counter()
-                if not handle_memory_full(None, st.request_id,
-                                          at_admission=True):
-                    return None
-                return False
-            budget.spend(seq_len)
-            blocks = mgr.allocate(need)
-            note_peak()
-            row = np.zeros((self.blocks_per_seq,), np.int32)
-            row[:len(blocks)] = blocks
-            t_pf = time.perf_counter()
-            ids_arr = jnp.asarray(
-                np.array(trace.prompt_tokens, np.int32)[None, :])
-            logits, kvs = self._prefill(self.params, ids_arr)
-            attn_kvs, slot_state = self._split_prefill_kvs(kvs)
-            cache = self._write_prefix_kv(cache, attn_kvs, row, seq_len)
-            st.prefix = _SharedPrefix(blocks=blocks, seq_len=seq_len,
-                                      last_logits=logits[:, -1],
-                                      slot_state=slot_state)
-            st.prefill_s += time.perf_counter() - t_pf
-            return True
-
-        def admit_shared(trace: Trace, st: _ReqState,
-                         wave: List[Trace]) -> None:
-            """Fork the request's prompt blocks into a fresh trace."""
-            nonlocal cache
-            prefix = st.prefix
-            waiting.remove(trace)
-            slot = free_slots.pop(0)
-            if trace.runnable_since >= 0:
-                trace.wait_time += time.perf_counter() - trace.runnable_since
-                trace.runnable_since = -1.0
-            trace.blocks = mgr.fork(prefix.blocks)
-            trace.batch_slot = slot
-            trace.status = TraceStatus.RUNNING
-            trace.prefill_count += 1
-            running.append(trace)
-            if st.admit_t is None:
-                st.admit_t = time.perf_counter()
-            row = np.zeros((self.blocks_per_seq,), np.int32)
-            row[:len(trace.blocks)] = trace.blocks
-            block_tables[slot] = row
-            positions[slot] = prefix.seq_len
-            dirty["block_tables"] = dirty["positions"] = True
-            if prefix.slot_state is not None:
-                cache = self._write_slot_state(cache, prefix.slot_state, slot)
-            wave.append(trace)
-
-        def admit_private(trace: Trace, st: _ReqState) -> None:
-            """Original per-trace path: full prefill into private blocks
-            (flag off, prompt > capacity, or preempted-trace recompute)."""
-            nonlocal cache
-            ids = trace.prompt_tokens + trace.output_tokens
-            need = mgr.blocks_for_tokens(min(len(ids) + 1, cap))
-            waiting.remove(trace)
-            blocks = mgr.allocate(need)
-            note_peak()
-            slot = free_slots.pop(0)
-            if trace.runnable_since >= 0:
-                trace.wait_time += time.perf_counter() - trace.runnable_since
-                trace.runnable_since = -1.0
-            trace.blocks = blocks
-            trace.batch_slot = slot
-            trace.status = TraceStatus.RUNNING
-            trace.prefill_count += 1
-            running.append(trace)
-            if st.admit_t is None:
-                st.admit_t = time.perf_counter()
-
-            row = np.zeros((self.blocks_per_seq,), np.int32)
-            row[:len(blocks)] = blocks
-            block_tables[slot] = row
-            t_pf = time.perf_counter()
-            ids_arr = jnp.asarray(np.array(ids, np.int32)[None, :])
-            logits, kvs = self._prefill(self.params, ids_arr)
-            cache_new = self._write_prefill(cache, kvs, slot, row, len(ids))
-            # next token continues from the last prefill logit
-            positions[slot] = len(ids)
-            dirty["block_tables"] = dirty["positions"] = True
-            dirty["tokens"] = True
-            self._rng, k = jax.random.split(self._rng)
-            sp = ecfg.sampling
-            nt, conf = sample_tokens(
-                k, logits[:, -1], temperature=sp.temperature,
-                top_k=sp.top_k, top_p=sp.top_p)
-            cur_tokens[slot] = int(nt[0])
-            trace.output_tokens.append(int(nt[0]))
-            trace.token_confidences.append(float(conf[0]))
-            st.note_first_token()
-            cache = cache_new
-            st.prefill_s += time.perf_counter() - t_pf
-
-        def flush_first_tokens(wave: List[Trace]) -> None:
-            """Batch the first-token sampling for every trace admitted via
-            prefix forking in this admission wave (one device call)."""
-            live = [t for t in wave if t.status == TraceStatus.RUNNING]
-            if not live:
-                return
-            logits = jnp.concatenate(
-                [by_req[t.request_id].prefix.last_logits for t in live],
-                axis=0)  # [m, Vp]
-            self._rng, k = jax.random.split(self._rng)
-            sp = ecfg.sampling
-            nt, conf = sample_tokens(
-                k, logits, temperature=sp.temperature,
-                top_k=sp.top_k, top_p=sp.top_p)
-            nt = np.asarray(nt).tolist()
-            conf = np.asarray(conf).tolist()
-            dirty["tokens"] = True
-            for i, trace in enumerate(live):
-                cur_tokens[trace.batch_slot] = nt[i]
-                trace.output_tokens.append(nt[i])
-                trace.token_confidences.append(conf[i])
-                by_req[trace.request_id].note_first_token()
-
-        def try_admit(budget: _TokenBudget) -> bool:
-            """One admission wave. Returns True if anything was admitted
-            or any prefill chunk advanced."""
-            wave: List[Trace] = []
-            advanced = False
-            # in-flight chunked prefills advance first (oldest work)
-            for rid in list(jobs):
-                job = jobs.get(rid)
-                if job is None:
-                    continue
-                before = job.pos
-                status = advance_job(job, budget)
-                if status == "ready" or job.pos > before:
-                    advanced = True
-            skipped: set = set()
-            while free_slots:
-                trace = next(
-                    (t for t in waiting
-                     if t.request_id not in skipped
-                     and by_req[t.request_id].admissible(t)), None)
-                if trace is None:
-                    break
-                st = by_req[trace.request_id]
-                # sharing needs prompt blocks + one private block to ever
-                # fit the pool; pathologically small pools fall back to
-                # the per-trace path (which can truncate-finish)
-                prefix_fits = (mgr.blocks_for_tokens(
-                    len(trace.prompt_tokens)) + 1 <= ecfg.num_blocks - 1)
-                fresh = (share and not trace.output_tokens
-                         and len(trace.prompt_tokens) <= cap
-                         and prefix_fits)
-                if fresh:
-                    L = len(trace.prompt_tokens)
-                    if (st.prefix is None and pcache is not None
-                            and not st.cache_probed):
-                        # probe the prefix cache exactly once per request
-                        # (stats stay deterministic across re-picks) and
-                        # pin the hit immediately: the fork's refcounts
-                        # protect the matched blocks from eviction while
-                        # the request waits for a slot or budget
-                        st.cache_probed = True
-                        hit_blocks, hit_tokens = pcache.match(
-                            trace.prompt_tokens)
-                        if hit_blocks:
-                            st.cache_hit = (mgr.fork(hit_blocks),
-                                            hit_tokens)
-                            st.cached_tokens = hit_tokens
-                    use_job = st.prefix is None and (
-                        st.request_id in jobs
-                        or st.cache_hit is not None
-                        or (chunk is not None and L > chunk))
-                    if use_job:
-                        # chunked path: open/advance the prefill job; the
-                        # trace admits once the prefix completes. Cache
-                        # hits always take this path — the suffix runs as
-                        # block-size chunks (a fixed jit shape) even on
-                        # engines configured for one-shot prefill.
-                        job = jobs.get(st.request_id)
-                        if job is None:
-                            base, base_tokens = st.cache_hit or ([], 0)
-                            st.cache_hit = None
-                            job = _PrefillJob(
-                                st,
-                                mgr.reserve(mgr.blocks_for_tokens(L)
-                                            - len(base)),
-                                self.blocks_per_seq,
-                                chunk=chunk if chunk is not None else bs,
-                                base_blocks=base, base_tokens=base_tokens,
-                                eager=chunk is None)
-                            jobs[st.request_id] = job
-                        before = job.pos
-                        status = advance_job(job, budget)
-                        if status == "ready":
-                            advanced = True
-                            continue  # re-pick: prefix now exists
-                        if job.pos > before:
-                            advanced = True
-                        if status == "memory":
-                            break
-                        skipped.add(st.request_id)
-                        continue
-                    if st.prefix is None and not budget.can(
-                            L, force=not running):
-                        skipped.add(st.request_id)
-                        continue
-                    ok = ensure_prefix(st, trace, budget)
-                    if ok is None:
-                        break
-                    if ok is False:
-                        continue
-                    # the admitted trace decodes THIS tick — up to a
-                    # full horizon of tokens: charge them pessimistically
-                    # so a tick never exceeds the budget
-                    if not budget.can(K_cfg,
-                                      force=not running and not wave):
-                        skipped.add(st.request_id)
-                        continue
-                    # headroom for this trace's first private block (the
-                    # COW copy of the prompt's tail block, or a fresh
-                    # block when the prompt ends exactly on a boundary)
-                    if not evict_for(1):
-                        if trace.runnable_since < 0:
-                            trace.runnable_since = time.perf_counter()
-                        if not handle_memory_full(None, st.request_id,
-                                                  at_admission=True):
-                            break
-                        continue
-                    budget.spend(K_cfg)
-                    admit_shared(trace, st, wave)
-                else:
-                    ids_len = (len(trace.prompt_tokens)
-                               + len(trace.output_tokens))
-                    # prefill cost + this tick's decode horizon
-                    if not budget.can(ids_len + K_cfg, force=not running):
-                        skipped.add(trace.request_id)
-                        continue
-                    need = mgr.blocks_for_tokens(min(ids_len + 1, cap))
-                    if not evict_for(need):
-                        # memory full at admission: STEP prunes,
-                        # baselines wait
-                        if trace.runnable_since < 0:
-                            trace.runnable_since = time.perf_counter()
-                        if not handle_memory_full(None, st.request_id,
-                                                  at_admission=True):
-                            break
-                        if not evict_for(need):
-                            break
-                        continue
-                    budget.spend(ids_len + K_cfg)
-                    admit_private(trace, st)
-            flush_first_tokens(wave)
-            return advanced or bool(wave)
-
-        # ------------------------------------------------------------
-        # main tick loop
-        # ------------------------------------------------------------
-        while pending or waiting or running or jobs:
-            now_rel = time.perf_counter() - t_start
-            admit_arrivals(now_rel)
-            if not (waiting or running or jobs):
-                # idle: nothing runnable until the next arrival
-                nxt = pending.next_arrival()
-                if nxt is not None:
-                    time.sleep(min(max(nxt - now_rel, 0.0), 0.02) + 1e-4)
-                continue
-
-            for st in started:
-                st.update_gate()
-            pressure = current_pressure()
-            for st in started:
-                if not st.done():
-                    st.policy.observe_pressure(pressure)
-
-            # decode may emit up to decode_horizon tokens per running
-            # trace this tick; charge the budget pessimistically so a
-            # tick can never exceed it
-            budget = _TokenBudget(
-                None if ecfg.max_tokens_per_step is None
-                else max(ecfg.max_tokens_per_step - len(running) * K_cfg, 0))
-            progressed = try_admit(budget)
-            if not running:
-                if not (waiting or jobs or pending):
-                    break
-                if progressed:
-                    idle_ticks = 0
-                    continue
-                if pending:
-                    # arrivals still due: wait for them (not a deadlock)
-                    nxt = pending.next_arrival()
-                    now_rel = time.perf_counter() - t_start
-                    if nxt is not None and nxt > now_rel:
-                        time.sleep(min(nxt - now_rel, 0.02) + 1e-4)
-                    continue
-                idle_ticks += 1
-                if idle_ticks >= 3:
-                    raise RuntimeError("no trace schedulable")
-                continue
-            idle_ticks = 0
-
-            # ensure every running trace exclusively owns the block its
-            # next token's KV will be written into: allocate fresh blocks
-            # at the growth frontier, copy-on-write still-shared (prompt)
-            # blocks
-            progress = True
-            for trace in list(running):
-                if trace.status != TraceStatus.RUNNING:
-                    # released (pruned/preempted) as an earlier trace's
-                    # memory-full victim within this very loop: it no
-                    # longer needs a write block, and raising pressure
-                    # on its behalf would evict a live trace for nothing
-                    continue
-                pos = int(positions[trace.batch_slot])
-                bidx = (pos % cap) // bs  # writes land at pos % window
-                if owns_write_block(trace, bidx):
-                    continue
-                while not evict_for(1):
-                    if not handle_memory_full(trace, trace.request_id):
-                        progress = False
-                        break
-                    if trace.status != TraceStatus.RUNNING:
-                        break  # the needy trace itself was pruned/preempted
-                if trace.status != TraceStatus.RUNNING or not progress:
-                    continue
-                claim_write_block(trace, bidx)
-            if not running:
-                continue
-
-            # --------------------------------------------------------
-            # decode horizon: how many tokens may this tick fuse?
-            # --------------------------------------------------------
-            K_tick = K_cfg
-            if K_cfg > 1 and waiting:
-                # Admission pressure: count the blocks a full-horizon
-                # frontier would actually ALLOCATE (most ticks the write
-                # block has unwritten slots left and the answer is 0 —
-                # the horizon is free). If extending would drain the
-                # free list to the last block, pre-allocation could
-                # starve waiting admissions and shift memory-triggered
-                # pruning decisions away from their horizon=1 points:
-                # fall back to a single-token tick until the contention
-                # clears.
-                needed_new = 0
-                for trace in running:
-                    needed_new += len(
-                        {bidx for _, bidx in frontier_walk(trace, K_cfg)
-                         if not owns_write_block(trace, bidx)})
-                if needed_new and not evict_for(needed_new + 1):
-                    self.horizon_fallbacks += 1
-                    K_tick = 1
-
-            limits = np.zeros((B,), np.int32)
-            for trace in running:
-                limits[trace.batch_slot] = (
-                    1 if K_tick == 1 else extend_frontier(trace, K_tick))
-
-            # one fixed-shape fused decode call: K_tick iterations of
-            # decode + on-device sampling + step-boundary score capture
-            n_by_req: Dict[int, int] = {}
-            for t in running:
-                n_by_req[t.request_id] = n_by_req.get(t.request_id, 0) + 1
-            t_dec = time.perf_counter()
-            ss = self._ss
-            for name, arr in (("tokens", cur_tokens),
-                              ("positions", positions),
-                              ("block_tables", block_tables)):
-                if dirty[name] or dev[name] is None:
-                    if ss is None:
-                        dev[name] = jnp.asarray(arr)
-                    else:  # upload straight into the mesh layout
-                        up = "table" if name == "block_tables" else "lane"
-                        dev[name] = jax.device_put(arr, ss[up])
-                    dirty[name] = False
-            limits_dev = (jnp.asarray(limits) if ss is None
-                          else jax.device_put(limits, ss["lane"]))
-            decode_fn = (self._decode if K_tick == K_cfg
-                         else self._decode_single)
-            (toks_d, confs_d, scores_d, tv_d, sv_d, fin_tok, fin_pos,
-             cache, self._rng) = decode_fn(
-                self.params, cache, dev["tokens"], dev["positions"],
-                limits_dev, dev["block_tables"],
-                self._rng, self.scorer_params)
-            # single host sync per tick; .tolist() batches the per-trace
-            # float()/int() conversions of the old per-token loop
-            toks_h, confs_h, scores_h, tv_h, sv_h, ft_h, fp_h = (
-                x.tolist() for x in jax.device_get(
-                    (toks_d, confs_d, scores_d, tv_d, sv_d,
-                     fin_tok, fin_pos)))
-            dev["tokens"], dev["positions"] = fin_tok, fin_pos
-            cur_tokens[:] = ft_h
-            positions[:] = fp_h
-            dt = time.perf_counter() - t_dec
-            tot = sum(n_by_req.values())
-            for rid, n in n_by_req.items():
-                by_req[rid].decode_s += dt * n / tot
-
-            for trace in list(running):
-                st = by_req[trace.request_id]
-                slot = trace.batch_slot
-                valid_row = tv_h[slot]
-                n_emit = 0
-                for v in valid_row:
-                    if not v:
-                        break
-                    n_emit += 1
-                # scores belong to the hidden states of the iteration
-                # INPUT tokens; score_valid marks the step boundaries
-                # (input token == step_id) inside the emitted prefix
-                if st.policy.uses_scorer:
-                    burst_scores = [scores_h[slot][i]
-                                    for i in range(n_emit) if sv_h[slot][i]]
-                    if burst_scores:
-                        trace.add_step_scores(burst_scores)
-                else:
-                    burst_scores = []
-                burst_toks = toks_h[slot][:n_emit]
-                burst_confs = confs_h[slot][:n_emit]
-                trace.extend_output(burst_toks, burst_confs)
-                st.policy.observe_decode_burst(trace, burst_toks,
-                                               burst_confs, burst_scores)
-                if n_emit and (burst_toks[-1] == tok.eos_id
-                               or trace.num_tokens >= ecfg.max_new_tokens):
-                    finish(trace)
-
-            # signal-triggered termination (DeepConf / Slim-SC / STEP
-            # proactive pruning under admission pressure)
-            for st in started:
-                own = [t for t in running if t.request_id == st.request_id]
-                if not own:
-                    continue
-                for trace in st.policy.traces_to_terminate(own):
-                    if trace.status == TraceStatus.RUNNING:
-                        release(trace, TraceStatus.PRUNED)
-
-        for job in list(jobs.values()):  # defensive: no job survives
-            job.abort()
-        jobs.clear()
-        for st in states:  # defensive: no prefix may outlive its batch
-            release_prefix(st)
-        if pcache is not None:
-            self._kv_cache = cache  # keep parked KV live for the next batch
-        return peak_blocks

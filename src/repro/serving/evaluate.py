@@ -105,13 +105,18 @@ def _aggregate(method: str, n_traces: int, problems: List[Problem],
 
 def evaluate_method(method: str, params: dict, cfg: ModelConfig,
                     problems: List[Problem], n_traces: int,
-                    ecfg: EngineConfig,
+                    ecfg: Optional[EngineConfig] = None,
                     scorer_params: Optional[dict] = None,
                     policy_kwargs: Optional[dict] = None,
                     mesh=None,
                     verbose: bool = False) -> EvalResult:
-    """One engine + one request at a time — the paper's serial setting."""
+    """One engine + one request at a time — the paper's serial setting.
+
+    ``ecfg=None`` builds the engine config from the ``REPRO_*``
+    environment (``EngineConfig.from_env()``)."""
     tok = get_tokenizer()
+    if ecfg is None:
+        ecfg = EngineConfig.from_env()
     policy_kwargs = dict(policy_kwargs or {})
     if method == "cot":
         n_traces = 1
@@ -129,13 +134,16 @@ def evaluate_method(method: str, params: dict, cfg: ModelConfig,
 
 def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
                             problems: List[Problem], n_traces: int,
-                            ecfg: EngineConfig,
+                            ecfg: Optional[EngineConfig] = None,
                             scorer_params: Optional[dict] = None,
                             policy_kwargs: Optional[dict] = None,
                             arrival_times: Optional[Sequence[float]] = None,
                             on_result: Optional[
                                 Callable[[RequestResult], None]] = None,
                             mesh=None,
+                            scheduler=None,
+                            request_overrides: Optional[
+                                Sequence[dict]] = None,
                             verbose: bool = False) -> EvalResult:
     """All problems submitted to ONE engine as a request queue: traces of
     different requests co-exist in the decode batch and contend for the
@@ -146,27 +154,41 @@ def evaluate_method_batched(method: str, params: dict, cfg: ModelConfig,
     ``arrival_times`` (seconds, per problem) turns the batch into an
     online arrival trace (continuous batching); ``on_result`` streams
     each request's ``RequestResult`` the moment it completes.
+
+    ``ecfg=None`` builds the engine config from the ``REPRO_*``
+    environment (``EngineConfig.from_env()``). ``scheduler`` selects the
+    engine's scheduling policy (e.g. ``serving.TenantScheduler`` for
+    weighted fair multi-tenant budgets); ``request_overrides`` supplies
+    per-request ``Request`` kwargs — ``tenant``/``priority``/``slo`` and
+    the per-request ``sampling``/``max_new_tokens`` overrides.
     """
     tok = get_tokenizer()
+    if ecfg is None:
+        ecfg = EngineConfig.from_env()
     policy_kwargs = dict(policy_kwargs or {})
     if method == "cot":
         n_traces = 1
     if arrival_times is None:
         arrival_times = [0.0] * len(problems)
     assert len(arrival_times) == len(problems)
+    if request_overrides is None:
+        request_overrides = [{}] * len(problems)
+    assert len(request_overrides) == len(problems)
     requests = [
         Request(request_id=qid,
                 prompt_tokens=tok.encode(make_prompt(p), add_bos=True),
                 n_traces=n_traces,
                 policy=make_policy(method, **policy_kwargs),
-                arrival_time=float(at))
-        for qid, (p, at) in enumerate(zip(problems, arrival_times))
+                arrival_time=float(at),
+                **extra)
+        for qid, (p, at, extra) in enumerate(
+            zip(problems, arrival_times, request_overrides))
     ]
     default_policy = make_policy(method, **policy_kwargs)
     engine = Engine(params, cfg, ecfg, default_policy,
                     scorer_params=scorer_params
                     if default_policy.uses_scorer else None,
-                    mesh=mesh)
+                    mesh=mesh, scheduler=scheduler)
     results = engine.serve_batch(requests, on_complete=on_result)
     return _aggregate(method, n_traces, problems, results, verbose=verbose,
                       with_serving=True)

@@ -47,6 +47,12 @@ class RequestMetrics:
     decode_s: float = 0.0
     cached_tokens: int = 0           # prompt tokens served from the
     #                                  prefix cache (no prefill compute)
+    # multi-tenant serving (scheduler.TenantScheduler)
+    tenant: str = "default"
+    priority: int = 0
+    degraded_traces: int = 0         # traces shed by SLO admission
+    slo_ttft_s: Optional[float] = None   # the request's SLO targets
+    slo_tpot_s: Optional[float] = None   # (None = no objective attached)
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -66,6 +72,19 @@ class RequestMetrics:
         if self.finished_s is None:
             return None
         return self.finished_s - self.arrival_s
+
+    @property
+    def ttft_attained(self) -> Optional[bool]:
+        """Whether the request met its TTFT objective (None = no SLO)."""
+        if self.slo_ttft_s is None:
+            return None
+        return self.ttft_s is not None and self.ttft_s <= self.slo_ttft_s
+
+    @property
+    def tpot_attained(self) -> Optional[bool]:
+        if self.slo_tpot_s is None:
+            return None
+        return self.tpot_s is not None and self.tpot_s <= self.slo_tpot_s
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -124,7 +143,40 @@ def summarize(metrics: Sequence[RequestMetrics],
                             if total_prompt > 0 else 0.0),
         "requests_with_prefix_hit": sum(
             m.cached_tokens > 0 for m in metrics),
+        "degraded_traces": sum(m.degraded_traces for m in metrics),
+        "slo": _slo_attainment(metrics),
     }
+
+
+def _slo_attainment(metrics: Sequence[RequestMetrics]) -> dict:
+    """SLO attainment over the requests that carry an objective. A shed
+    request (every trace dropped by admission control, so it never
+    produced a first token) counts as a TTFT miss — shedding is a
+    capacity decision, not an excuse."""
+    ttft_j = [m.ttft_attained for m in metrics
+              if m.ttft_attained is not None]
+    tpot_j = [m.tpot_attained for m in metrics
+              if m.tpot_attained is not None]
+    return {
+        "requests_with_slo": sum(
+            m.slo_ttft_s is not None or m.slo_tpot_s is not None
+            for m in metrics),
+        "ttft_attainment": (sum(ttft_j) / len(ttft_j)
+                            if ttft_j else None),
+        "tpot_attainment": (sum(tpot_j) / len(tpot_j)
+                            if tpot_j else None),
+    }
+
+
+def summarize_by_tenant(metrics: Sequence[RequestMetrics],
+                        ps: Sequence[float] = (50, 90, 99)) -> dict:
+    """Per-tenant breakdown of ``summarize`` (the BENCH_slo.json
+    payload): tenants are compared on the same percentile table, plus
+    their SLO attainment."""
+    tenants: Dict[str, list] = {}
+    for m in metrics:
+        tenants.setdefault(m.tenant, []).append(m)
+    return {name: summarize(ms, ps) for name, ms in sorted(tenants.items())}
 
 
 def _mean(xs: Sequence[float]) -> float:

@@ -12,9 +12,20 @@ Ordering: requests are released in (arrival_time, submission index)
 order, so two requests arriving at the same instant keep their
 submission order — with every arrival at t=0 the scheduler sees exactly
 the PR-1 ``serve_batch`` admission sequence.
+
+Implementation: a binary heap keyed on (arrival_time, submission index).
+``push`` and ``pop_arrived`` are O(log n) per request; the previous
+sorted-list implementation paid O(n) per ``push`` (insertion scan) and
+per pop (``list.pop(0)`` shifts the tail), which the 10-100x larger load
+scenarios turned into measurable scheduler overhead. The submission
+index in the key is what preserves the stable-ordering contract above —
+heaps are not otherwise stable (pinned by
+``tests/test_continuous_batching.py::test_request_queue_ordering``).
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from typing import List, Optional, Sequence
 
 
@@ -27,33 +38,31 @@ class RequestQueue:
     """Arrival-ordered queue of not-yet-started requests."""
 
     def __init__(self, requests: Sequence = ()):
-        # stable sort on arrival time alone: requests sharing an arrival
-        # instant keep their submission order
-        self._pending: List = sorted(requests, key=_arrival)
+        self._count = itertools.count()  # submission index (tie-break)
+        self._heap: List = [(_arrival(r), next(self._count), r)
+                            for r in requests]
+        heapq.heapify(self._heap)
 
     def __len__(self) -> int:
-        return len(self._pending)
+        return len(self._heap)
 
     def __bool__(self) -> bool:
-        return bool(self._pending)
+        return bool(self._heap)
 
     def push(self, request) -> None:
         """Insert a late submission, keeping arrival order."""
-        at = _arrival(request)
-        i = 0
-        while i < len(self._pending) and _arrival(self._pending[i]) <= at:
-            i += 1
-        self._pending.insert(i, request)
+        heapq.heappush(self._heap,
+                       (_arrival(request), next(self._count), request))
 
     def next_arrival(self) -> Optional[float]:
         """Arrival time of the earliest pending request (None if empty)."""
-        if not self._pending:
+        if not self._heap:
             return None
-        return _arrival(self._pending[0])
+        return self._heap[0][0]
 
     def pop_arrived(self, now: float) -> List:
         """Release every request whose arrival time has passed."""
         out: List = []
-        while self._pending and _arrival(self._pending[0]) <= now:
-            out.append(self._pending.pop(0))
+        while self._heap and self._heap[0][0] <= now:
+            out.append(heapq.heappop(self._heap)[2])
         return out

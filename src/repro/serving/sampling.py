@@ -75,3 +75,64 @@ def sample_tokens(rng: jax.Array, logits: jax.Array, *,
     """Jitted wrapper over ``sample_logits`` (host-side call sites)."""
     return sample_logits(rng, logits, temperature=temperature,
                          top_k=top_k, top_p=top_p)
+
+
+def sample_logits_lanes(rng: jax.Array, logits: jax.Array,
+                        temperature: jax.Array, top_k: jax.Array,
+                        top_p: jax.Array):
+    """Lane-wise ``sample_logits``: per-row sampling params as TRACED
+    [B] arrays (the per-request ``SamplingParams`` override path — one
+    jit instance serves every parameter mix).
+
+    The math mirrors the scalar path op-for-op per lane — same
+    softmax/sort/cumsum order, same cutoff comparisons — so a lane
+    whose (temperature, top_k, top_p) equal the scalar call's values
+    draws the identical token for the same key. Greedy lanes
+    (``temperature <= 0``) are an exact argmax that ignores the key,
+    matching the scalar contract; disabled filters (``top_k <= 0`` or
+    ``>= V``, ``top_p`` outside (0, 1)) pass logits through unmasked.
+    """
+    B, V = logits.shape
+    logits_f = logits.astype(jnp.float32)
+    base_logp = jax.nn.log_softmax(logits_f, axis=-1)
+    temperature = temperature.astype(jnp.float32)[:, None]
+    top_p = top_p.astype(jnp.float32)[:, None]
+
+    scaled = logits_f / jnp.maximum(temperature, 1e-6)
+
+    # top-k: k-th largest value per lane via an ascending sort (the
+    # scalar path's sort[:, -k]); lanes with the filter disabled keep
+    # their logits (cutoff -inf)
+    sorted_asc = jnp.sort(scaled, axis=-1)
+    k_idx = jnp.clip(V - top_k, 0, V - 1).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_asc, k_idx[:, None], axis=1)
+    k_on = ((top_k > 0) & (top_k < V))[:, None]
+    kth = jnp.where(k_on, kth, -jnp.inf)
+    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+
+    # top-p: smallest prefix of the descending-sorted distribution with
+    # cumulative mass >= top_p (same cumsum-cutoff as the scalar path)
+    sorted_desc = sorted_asc[:, ::-1]
+    sorted_desc = jnp.where(sorted_desc < kth, -jnp.inf, sorted_desc)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1).astype(jnp.int32)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx[:, None], axis=1)
+    p_on = (top_p > 0.0) & (top_p < 1.0)
+    cutoff = jnp.where(p_on, cutoff, -jnp.inf)
+    scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+
+    sampled = jax.random.categorical(rng, scaled, axis=-1)
+    greedy = jnp.argmax(logits_f, axis=-1)
+    tokens = jnp.where(temperature[:, 0] <= 0.0, greedy, sampled)
+    conf = jnp.exp(jnp.take_along_axis(base_logp, tokens[:, None],
+                                       axis=1))[:, 0]
+    return tokens.astype(jnp.int32), conf
+
+
+@jax.jit
+def sample_tokens_lanes(rng: jax.Array, logits: jax.Array,
+                        temperature: jax.Array, top_k: jax.Array,
+                        top_p: jax.Array):
+    """Jitted wrapper over ``sample_logits_lanes``."""
+    return sample_logits_lanes(rng, logits, temperature, top_k, top_p)
