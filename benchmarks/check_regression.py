@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -96,6 +97,28 @@ RULES = {
         ("tenants.batch.e2e_s.p99", "max_ratio", 5.0),
         ("throughput_tok_per_s", "min_ratio", 0.2),
     ],
+    "fault_serving": [
+        # the fault-tolerance contract: recovery is invisible — the
+        # faulted replay's tokens match the fault-free replay exactly,
+        # every injected transient fault was retried to recovery (no
+        # degrade rung taken), and the chaos leg quarantined / cancelled
+        # exactly what the seeded plan dictates
+        ("outputs_identical", "equal", None),
+        ("step_faults", "equal", None),
+        ("recovered_steps", "equal", None),
+        ("alloc_stalls", "equal", None),
+        ("degraded_to_dense", "equal", None),
+        ("degraded_horizon", "equal", None),
+        ("chaos.num_deadline_exceeded", "equal", None),
+        ("chaos.nan_quarantined", "equal", None),
+        ("chaos.num_completed", "equal", None),
+        # goodput under faults: retry backoff is milliseconds against a
+        # multi-second replay, so faulted goodput stays close to
+        # fault-free (local runs ~1.0; 0.5 absorbs CI-runner noise)
+        ("goodput_ratio", "min_abs", 0.5),
+        ("goodput_ratio", "min_ratio", 0.3),
+        ("faulted.wall_s", "max_ratio", 5.0),
+    ],
     "sharded_serving": [
         # the sharded-engine contract: token-identical generations on
         # the (data=2, model=2) mesh, full-length runs on both engines
@@ -130,6 +153,19 @@ def _rule_label(kind: str, bound) -> str:
             "min_abs": f">= {bound}"}[kind]
 
 
+def _non_finite(v) -> str | None:
+    """Why ``v`` can't be gated, or ``None`` if it can. A gated metric
+    that is ``None`` (the summarizer's empty-population marker) or NaN
+    must fail LOUDLY: ``NaN > x`` and ``NaN < x`` are both False, so a
+    NaN that slipped into a reference would sail through every ratio
+    rule and silently disable the gate forever."""
+    if v is None:
+        return "None (empty-population marker)"
+    if isinstance(v, float) and not math.isfinite(v):
+        return f"non-finite ({v!r})"
+    return None
+
+
 def check(new_path: str, ref_path: str):
     """Returns (problems, rows): failure strings plus one comparison row
     per rule — (benchmark, metric, new, ref, rule, ok) — for the
@@ -150,6 +186,19 @@ def check(new_path: str, ref_path: str):
         except KeyError as e:
             problems.append(f"{bench}.{path}: missing key {e}")
             rows.append((bench, path, "missing", "missing",
+                         _rule_label(kind, bound), False))
+            continue
+        bad = [(side, reason)
+               for side, v in (("current", nv), ("reference", rv))
+               if (reason := _non_finite(v))]
+        if bad:
+            for side, reason in bad:
+                problems.append(
+                    f"{bench}.{path}: {side} value is {reason} — gated "
+                    f"metrics must be finite"
+                    + ("; re-bless the reference"
+                       if side == "reference" else ""))
+            rows.append((bench, path, _fmt(nv), _fmt(rv),
                          _rule_label(kind, bound), False))
             continue
         problem = None

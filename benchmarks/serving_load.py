@@ -15,6 +15,15 @@ parked blocks and prefills only the fresh suffix. Emits
 ``BENCH_prefix_cache.json`` (hit rate, prefill tokens saved, TTFT
 on/off) and asserts the generated tokens are identical either way.
 
+``--faults`` runs the fault-tolerance workload: the Poisson replay
+served twice on identical requests — once fault-free, once under a
+seeded transient fault plan (device-step failures retried with backoff,
+a one-tick allocation stall) — asserting the faulted run recovers to
+bit-identical outputs, then a chaos leg (NaN lane poisoning + an
+impossible deadline) exercising quarantine and cancellation. Emits
+``BENCH_faults.json`` (recovered steps, stalls, quarantines,
+cancellations, and goodput under faults vs fault-free).
+
 ``--slo`` runs the multi-tenant SLO scenario suite: a 10x larger
 workload (bursty arrival waves, heavy-tail prompt lengths, mixed
 single-trace "chat" and 4-trace "reasoning" requests) served to a
@@ -46,9 +55,10 @@ from repro.core.trace import TraceStatus
 from repro.data.tokenizer import get_tokenizer
 from repro.data.arithmetic import make_prompt
 from repro.models.init import init_params
-from repro.serving import (SLO, CacheStats, Engine, EngineConfig, Request,
-                           SamplingParams, TenantScheduler, make_problems,
-                           poisson_arrivals, summarize, summarize_by_tenant)
+from repro.serving import (SLO, CacheStats, Engine, EngineConfig, FaultPlan,
+                           Request, SamplingParams, TenantScheduler,
+                           make_problems, poisson_arrivals, summarize,
+                           summarize_by_tenant)
 
 N_REQUESTS = 6
 N_TRACES = 4
@@ -396,6 +406,139 @@ def run_slo(verbose: bool = False) -> dict:
     return payload
 
 
+# ---------------------------------------------------------------------------
+# fault-tolerance workload (retry/degrade recovery, quarantine, deadlines)
+# ---------------------------------------------------------------------------
+
+# transient-only plan: two consecutive device-step failures at tick 2
+# (retried within the retry_limit=3 budget -> recovered, no degrade
+# rung), a one-tick allocation stall at tick 5 (below shed_after), and
+# one more step failure at tick 9. Recovery must be invisible: the
+# faulted replay produces bit-identical tokens to the fault-free one.
+FAULT_TRANSIENT_PLAN = "step@2x2,alloc@5,step@9"
+# chaos leg adds a NaN burst poisoning decode lane 1 at tick 6 — that
+# lane is quarantined (FAILED) while its siblings finish untouched.
+FAULT_CHAOS_PLAN = FAULT_TRANSIENT_PLAN + ",nan@6:slot=1"
+
+
+def _fault_engine(params, cfg, plan: str | None) -> Engine:
+    # faults=None explicitly: the engine default reads REPRO_FAULTS, and
+    # a CI chaos env leaking into the fault-free baseline would break
+    # the identity comparison. The plan is attached after jit warmup.
+    ecfg = EngineConfig(
+        max_batch=N_REQUESTS * N_TRACES, num_blocks=NUM_BLOCKS,
+        capacity=CAPACITY, max_new_tokens=MAX_NEW,
+        sampling=SamplingParams(temperature=0.0, top_k=0, top_p=1.0,
+                                max_new_tokens=MAX_NEW),
+        prefill_chunk_size=PREFILL_CHUNK,
+        max_tokens_per_step=MAX_TOKENS_PER_STEP,
+        prefix_cache=False, faults=None)
+    engine = Engine(params, cfg, ecfg, make_policy("sc"))
+    tok = get_tokenizer()
+    warm = build_requests(tok)[0]
+    warm.arrival_time = 0.0
+    engine.serve_batch([warm])
+    if plan is not None:
+        engine.fault_plan = FaultPlan.parse(plan, seed=ecfg.seed)
+    return engine
+
+
+def _fault_snapshot(results):
+    return [[(list(t.output_tokens), t.status.name) for t in r.traces]
+            for r in results]
+
+
+def run_faults(verbose: bool = False) -> dict:
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+
+    # identity leg: fault-free vs transient-fault replay of the same
+    # Poisson trace. Greedy decode + recovery that consumes no RNG means
+    # the snapshots must match token-for-token.
+    sides = {}
+    for mode, plan in (("clean", None), ("faulted", FAULT_TRANSIENT_PLAN)):
+        engine = _fault_engine(params, cfg, plan)
+        requests = build_requests(tok)
+        t0 = time.perf_counter()
+        results = engine.serve_batch(requests)
+        wall = time.perf_counter() - t0
+        assert engine.pool_drained()
+        engine.check_integrity()
+        tokens = sum(r.metrics.output_tokens for r in results
+                     if r.status == "completed")
+        sides[mode] = (_fault_snapshot(results), tokens, wall,
+                       engine.fault_stats)
+    identical = sides["faulted"][0] == sides["clean"][0]
+    assert identical, "fault recovery changed the generated tokens"
+    stats = sides["faulted"][3]
+    assert stats.recovered_steps == 2 and stats.degraded_horizon == 0, \
+        "transient plan was expected to recover without degrading"
+    goodput = {m: sides[m][1] / sides[m][2] for m in sides}
+    ratio = goodput["faulted"] / goodput["clean"]
+
+    # chaos leg: NaN lane poisoning + an unmeetable deadline on the last
+    # request — quarantine and cancellation on top of the retry path.
+    engine = _fault_engine(params, cfg, FAULT_CHAOS_PLAN)
+    requests = build_requests(tok)
+    requests[-1].deadline = 0.0
+    t0 = time.perf_counter()
+    results = engine.serve_batch(requests)
+    chaos_wall = time.perf_counter() - t0
+    assert engine.pool_drained()
+    engine.check_integrity()
+    chaos = summarize([r.metrics for r in results])
+    cstats = engine.fault_stats
+    assert cstats.nan_quarantined == 1, "NaN burst missed its lane"
+    assert chaos["num_deadline_exceeded"] == 1
+
+    payload = {
+        "benchmark": "fault_serving",
+        "config": {
+            "n_requests": N_REQUESTS, "n_traces": N_TRACES,
+            "max_new_tokens": MAX_NEW, "num_blocks": NUM_BLOCKS,
+            "capacity": CAPACITY, "arrival_rate_per_s": ARRIVAL_RATE,
+            "prefill_chunk_size": PREFILL_CHUNK,
+            "max_tokens_per_step": MAX_TOKENS_PER_STEP, "seed": SEED,
+            "transient_plan": FAULT_TRANSIENT_PLAN,
+            "chaos_plan": FAULT_CHAOS_PLAN,
+        },
+        "outputs_identical": identical,
+        "step_faults": stats.step_faults,
+        "step_retries": stats.step_retries,
+        "recovered_steps": stats.recovered_steps,
+        "alloc_stalls": stats.alloc_faults,
+        "degraded_to_dense": stats.degraded_to_dense,
+        "degraded_horizon": stats.degraded_horizon,
+        "goodput_ratio": ratio,
+        "clean": {"wall_s": sides["clean"][2],
+                  "goodput_tok_per_s": goodput["clean"]},
+        "faulted": {"wall_s": sides["faulted"][2],
+                    "goodput_tok_per_s": goodput["faulted"]},
+        "chaos": {
+            "wall_s": chaos_wall,
+            "num_completed": chaos["num_completed"],
+            "num_deadline_exceeded": chaos["num_deadline_exceeded"],
+            "num_cancelled": chaos["num_cancelled"],
+            "nan_quarantined": cstats.nan_quarantined,
+            "failed_traces": chaos["failed_traces"],
+        },
+    }
+    if verbose:
+        print(f"fault_serving: outputs_identical={identical} "
+              f"({stats.step_faults} step faults, "
+              f"{stats.recovered_steps} recovered, "
+              f"{stats.alloc_faults} alloc stalls)")
+        print(f"  goodput  clean={goodput['clean']:.1f} tok/s "
+              f"faulted={goodput['faulted']:.1f} tok/s "
+              f"ratio={ratio:.2f}")
+        print(f"  chaos    completed={chaos['num_completed']}"
+              f"/{N_REQUESTS} "
+              f"deadline_exceeded={chaos['num_deadline_exceeded']} "
+              f"quarantined={cstats.nan_quarantined}")
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multiturn", action="store_true",
@@ -405,6 +548,11 @@ def main():
                     help="run the multi-tenant SLO scenario suite "
                          "(bursty waves, heavy-tail prompts, tenant mix) "
                          "instead of the Poisson load replay")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the fault-tolerance workload (seeded "
+                         "transient faults vs fault-free identity, plus "
+                         "a NaN-quarantine / deadline chaos leg) instead "
+                         "of the Poisson load replay")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.multiturn:
@@ -412,6 +560,8 @@ def main():
             "BENCH_prefix_cache.json"
     elif args.slo:
         payload, default_out = run_slo(verbose=True), "BENCH_slo.json"
+    elif args.faults:
+        payload, default_out = run_faults(verbose=True), "BENCH_faults.json"
     else:
         payload, default_out = run(verbose=True), "BENCH_serving.json"
     out = os.path.abspath(args.out or os.path.join(

@@ -57,6 +57,11 @@ class AdmissionPressure:
     # preempts them.
     demand_by_tenant: Optional[Mapping[str, int]] = None
     deficit_by_tenant: Optional[Mapping[str, float]] = None
+    # fault-degraded serving: True while the engine runs a persistent-
+    # fault degrade rung (kernel->dense, horizon pin, fan-out shed). A
+    # policy may prune more conservatively — degraded capacity is
+    # transient, not a demand signal.
+    degraded: bool = False
 
     @property
     def memory_utilization(self) -> float:

@@ -17,6 +17,8 @@ class TraceStatus(enum.Enum):
     PREEMPTED = "preempted"    # baseline engines: KV freed, awaiting resume
     PRUNED = "pruned"          # STEP: terminated by policy
     FINISHED = "finished"
+    CANCELLED = "cancelled"    # released by Engine.cancel / deadline
+    FAILED = "failed"          # quarantined (NaN burst) or fatal fault
 
 
 @dataclasses.dataclass

@@ -102,6 +102,20 @@ def main():
                          "target, optional TPOT target. The tenant "
                          "scheduler degrades a request's n_traces when "
                          "its projected TTFT would miss the target.")
+    ap.add_argument("--deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-request completion deadline (seconds from "
+                         "serve start, same clock as arrivals): a "
+                         "request still running past its deadline is "
+                         "cancelled and reported with status "
+                         "'deadline_exceeded'. Implies --batched.")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault-injection plan, e.g. "
+                         "'step@2x3,alloc@5,nan@7:slot=1' — simulated "
+                         "device-step failures (retried with backoff, "
+                         "then degraded), allocation stalls, and NaN "
+                         "logit poisoning (lane quarantined). Overrides "
+                         "the REPRO_FAULTS env var. Implies --batched.")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's result as it completes")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
@@ -126,7 +140,8 @@ def main():
         use_kernel={"auto": "auto", "on": True, "off": False}[
             args.use_kernel],
         **({} if args.prefix_cache is None
-           else {"prefix_cache": args.prefix_cache == "on"}))
+           else {"prefix_cache": args.prefix_cache == "on"}),
+        **({} if args.faults is None else {"faults": args.faults}))
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))
     pkw = {"warmup": max(2, args.traces // 4)} \
@@ -147,9 +162,14 @@ def main():
                      for i in range(len(problems))]
     elif slo is not None:
         overrides = [{"slo": slo}] * len(problems)
+    if args.deadline is not None:
+        if overrides is None:
+            overrides = [{} for _ in problems]
+        overrides = [dict(o, deadline=args.deadline) for o in overrides]
 
     batched = args.batched or args.arrival_rate > 0 \
-        or args.tenant_weights is not None
+        or args.tenant_weights is not None \
+        or args.deadline is not None or args.faults is not None
     if batched:
         arrivals = poisson_arrivals(len(problems), args.arrival_rate,
                                     seed=args.seed)
@@ -158,6 +178,12 @@ def main():
             if not args.stream:
                 return
             m = r.metrics
+            if r.status != "completed" or m.ttft_s is None:
+                # cancelled / deadline_exceeded / failed requests may
+                # never have produced a first token
+                print(f"  << q{r.request_id} {r.status}: "
+                      f"tok={r.total_tokens}")
+                return
             print(f"  << q{r.request_id} done: ans={r.answer} "
                   f"ttft={m.ttft_s:.2f}s tpot={m.tpot_s * 1e3:.0f}ms "
                   f"e2e={m.e2e_s:.2f}s tok={r.total_tokens}")
@@ -178,6 +204,15 @@ def main():
           f"wait={res.total_wait_s:.2f}s pruned={res.num_pruned} "
           f"preempt={res.num_preemptions}")
     if res.serving is not None:
+        s = res.serving
+        ended_early = (s["num_cancelled"] + s["num_deadline_exceeded"]
+                       + s["num_failed"])
+        if ended_early:
+            print(f"[faults] cancelled={s['num_cancelled']} "
+                  f"deadline_exceeded={s['num_deadline_exceeded']} "
+                  f"failed={s['num_failed']} "
+                  f"failed_traces={s['failed_traces']}")
+    if res.serving is not None and res.serving["ttft_s"]["p50"] is not None:
         s = res.serving
         print(f"[serving] ttft p50={s['ttft_s']['p50']:.2f}s "
               f"p99={s['ttft_s']['p99']:.2f}s | "

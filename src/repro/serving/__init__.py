@@ -3,6 +3,9 @@ from repro.serving.engine import (Engine, EngineConfig, Request,
 from repro.serving.evaluate import (EvalResult, evaluate_method,
                                     evaluate_method_batched, make_problems,
                                     poisson_arrivals)
+from repro.serving.faults import (DeviceStepFault, FatalFaultError,
+                                  FaultPlan, FaultSpec, FaultStats,
+                                  RecoveryConfig)
 from repro.serving.kv_manager import BlockManager, Reservation
 from repro.serving.metrics import (RequestMetrics, percentiles, summarize,
                                    summarize_by_tenant)
@@ -11,7 +14,8 @@ from repro.serving.queue import RequestQueue
 from repro.serving.sampling import (SamplingParams, sample_tokens,
                                     sample_tokens_lanes)
 from repro.serving.scheduler import (SLO, Arrival, BudgetReplenish,
-                                     BurstDone, ChunkDone, Completion,
+                                     BurstDone, Cancelled, ChunkDone,
+                                     Completion,
                                      DeficitRoundRobin, Event, FIFOPolicy,
                                      SchedulerCore, SchedulingPolicy,
                                      TenantScheduler, TokenBudget,
@@ -31,5 +35,7 @@ __all__ = [
     "TenantScheduler", "DeficitRoundRobin", "TokenBudget",
     "WeightedTokenBudget", "default_scheduler", "parse_tenant_weights",
     "Event", "Arrival", "BudgetReplenish", "ChunkDone", "BurstDone",
-    "Completion",
+    "Completion", "Cancelled",
+    "FaultPlan", "FaultSpec", "FaultStats", "RecoveryConfig",
+    "DeviceStepFault", "FatalFaultError",
 ]

@@ -98,6 +98,7 @@ from repro.models.model import (copy_kv_block, forward_full,
                                 init_decode_cache, multi_decode_step,
                                 prefill_chunk_step, supports_chunked_prefill,
                                 write_prefill_kv)
+from repro.serving.faults import (FaultPlan, FaultStats, RecoveryConfig)
 from repro.serving.kv_manager import BlockManager
 from repro.serving.metrics import RequestMetrics
 from repro.serving.prefix_cache import PrefixCache
@@ -134,6 +135,17 @@ def _default_prefix_cache():
     the whole engine suite runs with cross-request KV reuse active."""
     val = os.environ.get("REPRO_PREFIX_CACHE", "").strip().lower()
     return val not in ("0", "off", "false")
+
+
+def _default_faults():
+    """``EngineConfig.faults`` default, overridable via the
+    ``REPRO_FAULTS`` env var (a fault-plan spec string, e.g.
+    ``"step@2,alloc@5"`` — see ``serving/faults.py`` for the grammar;
+    unset/empty -> no injection). The CI ``test-faults`` chaos lane sets
+    it to run whole suites under a recoverable fault plan without
+    touching test code."""
+    val = os.environ.get("REPRO_FAULTS", "").strip()
+    return val or None
 
 
 def resolve_use_kernel(setting, cfg: ModelConfig, mesh=None) -> bool:
@@ -229,20 +241,27 @@ class EngineConfig:
     # the engine falls back to a single-token tick so frontier
     # pre-allocation never starves waiting work.
     decode_horizon: int = 1
+    # Deterministic fault injection: a FaultPlan spec string (see
+    # serving/faults.py for the grammar, e.g. "step@2,alloc@5"), parsed
+    # at engine construction and seeded with ``seed``. None = no
+    # injection. Default from REPRO_FAULTS so the CI chaos lane can flip
+    # whole test suites onto a fault plan without touching call sites.
+    faults: Optional[str] = dataclasses.field(default_factory=_default_faults)
 
-    # env var -> (field, parser); the single documented source of truth
-    # for engine configuration from the environment (REPRO_USE_KERNEL
-    # and REPRO_PREFIX_CACHE additionally act as dataclass defaults so
-    # the CI lanes flip whole test suites without touching call sites).
+    # env var -> (field, parser, minimum); the single documented source
+    # of truth for engine configuration from the environment
+    # (REPRO_USE_KERNEL, REPRO_PREFIX_CACHE and REPRO_FAULTS
+    # additionally act as dataclass defaults so the CI lanes flip whole
+    # test suites without touching call sites).
     _ENV_FIELDS = {
-        "REPRO_MAX_BATCH": ("max_batch", int),
-        "REPRO_NUM_BLOCKS": ("num_blocks", int),
-        "REPRO_CAPACITY": ("capacity", int),
-        "REPRO_MAX_NEW_TOKENS": ("max_new_tokens", int),
-        "REPRO_SEED": ("seed", int),
-        "REPRO_PREFILL_CHUNK": ("prefill_chunk_size", int),
-        "REPRO_MAX_TOKENS_PER_STEP": ("max_tokens_per_step", int),
-        "REPRO_DECODE_HORIZON": ("decode_horizon", int),
+        "REPRO_MAX_BATCH": ("max_batch", int, 1),
+        "REPRO_NUM_BLOCKS": ("num_blocks", int, 2),
+        "REPRO_CAPACITY": ("capacity", int, 1),
+        "REPRO_MAX_NEW_TOKENS": ("max_new_tokens", int, 1),
+        "REPRO_SEED": ("seed", int, 0),
+        "REPRO_PREFILL_CHUNK": ("prefill_chunk_size", int, 1),
+        "REPRO_MAX_TOKENS_PER_STEP": ("max_tokens_per_step", int, 1),
+        "REPRO_DECODE_HORIZON": ("decode_horizon", int, 1),
     }
 
     @classmethod
@@ -264,10 +283,20 @@ class EngineConfig:
         of truth instead of scattered ``os.environ`` reads.
         """
         kwargs = {}
-        for env_name, (field, parse) in cls._ENV_FIELDS.items():
+        for env_name, (field, parse, lo) in cls._ENV_FIELDS.items():
             raw = os.environ.get(env_name, "").strip()
-            if raw:
-                kwargs[field] = parse(raw)
+            if not raw:
+                continue
+            try:
+                val = parse(raw)
+            except ValueError:
+                raise ValueError(
+                    f"{env_name}={raw!r}: expected an integer >= {lo}"
+                ) from None
+            if val < lo:
+                raise ValueError(
+                    f"{env_name}={raw!r}: expected an integer >= {lo}")
+            kwargs[field] = val
         kwargs.update(overrides)
         return cls(**kwargs)
 
@@ -315,6 +344,11 @@ class Request:
     tenant: str = "default"
     priority: int = 0
     slo: Optional[SLO] = None
+    # wall-clock budget in seconds relative to the serve start (same
+    # clock as ``arrival_time``). Once exceeded the request is released
+    # with status "deadline_exceeded"; traces already FINISHED keep
+    # their output, so the vote runs over whatever completed in time.
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -333,6 +367,8 @@ class RequestResult:
     # (stable by the time the streaming on_complete callback sees it)
     peak_blocks_used: int = 0
     metrics: Optional[RequestMetrics] = None
+    # "completed" | "cancelled" | "deadline_exceeded" | "failed"
+    status: str = "completed"
 
 
 
@@ -397,6 +433,20 @@ class Engine:
         # ticks where admission pressure forced the horizon down to 1
         # (observable for tests/benchmarks)
         self.horizon_fallbacks = 0
+        # fault tolerance: the injection plan (re-armed per serve so the
+        # same perturbation replays), the recovery policy knobs, and the
+        # cumulative ledger of injections/recoveries
+        self.fault_plan: Optional[FaultPlan] = (
+            FaultPlan.parse(ecfg.faults, seed=ecfg.seed)
+            if ecfg.faults else None)
+        self.recovery = RecoveryConfig()
+        self.fault_stats = FaultStats()
+        # persistent-fault degrade rung: pins every decode burst to
+        # horizon 1 (token-identical by the K==1 equivalence pin)
+        self.force_horizon1 = False
+        # request ids flagged by Engine.cancel, consumed by the
+        # scheduler core's cancellation sweep each pump iteration
+        self._cancel_requests: set = set()
         # tail of the last serve_batch's scheduler event stream
         self.last_event_log: list = []
         self._ss = None  # serving step shardings (mesh engines only)
@@ -705,6 +755,40 @@ class Engine:
         return self.idle_free_blocks == self.block_mgr.num_blocks - 1
 
     # ------------------------------------------------------------------
+    # fault tolerance
+    # ------------------------------------------------------------------
+    def cancel(self, request_id: int) -> None:
+        """Flag a request for mid-flight cancellation. Safe to call from
+        an ``on_complete`` callback (or any code running inside the
+        serve loop): the scheduler core's sweep releases the request's
+        traces, reservations and prefix-cache refs at the next pump
+        iteration and stamps its result ``status="cancelled"``. Unknown
+        or already-finished ids are ignored."""
+        self._cancel_requests.add(request_id)
+
+    def degrade_to_dense(self) -> bool:
+        """Persistent-fault ladder rung: drop the Pallas kernel path and
+        rebuild the jitted steps on dense XLA. Token-identical — the
+        kernel/dense equivalence is pinned by the kernel CI lane.
+        Returns False when already dense (rung unavailable)."""
+        if not self.use_kernel:
+            return False
+        self.use_kernel = False
+        self._build_steps()
+        self.fault_stats.degraded_to_dense += 1
+        return True
+
+    def check_integrity(self, expect_open_reservations: int = 0) -> None:
+        """Pool-wide invariant audit: allocator refcount conservation,
+        no orphaned reservations, prefix-trie consistency. Cheap enough
+        that the scheduler core runs it after every fault/cancel path;
+        tests call it at any quiesced point."""
+        self.block_mgr.check_integrity(expect_open_reservations)
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_integrity()
+        self.fault_stats.integrity_audits += 1
+
+    # ------------------------------------------------------------------
     # cache plumbing
     # ------------------------------------------------------------------
     def _init_cache(self):
@@ -835,9 +919,18 @@ class Engine:
                                 if req.max_new_tokens is not None
                                 else self.ecfg.max_new_tokens)))
 
+        if self.fault_plan is not None:
+            self.fault_plan.reset()  # replay the identical plan per serve
         core = SchedulerCore(self, states, t_start, on_complete,
                              sched=self.scheduler)
-        peak_blocks = core.run()
+        try:
+            peak_blocks = core.run()
+        except BaseException:
+            # mid-serve crash: drain everything the run still held so
+            # the pool is clean and the engine reusable, then re-raise
+            core.emergency_drain()
+            self.last_event_log = list(core.event_log)
+            raise
         # tail of the event stream (bounded deque), for observability
         # and the event-ordering tests
         self.last_event_log = list(core.event_log)
@@ -858,6 +951,7 @@ class Engine:
         done = st.t_done if st.t_done is not None else t_end
         total_tokens = sum(t.num_tokens for t in st.traces)
         num_pruned = sum(t.status == TraceStatus.PRUNED for t in st.traces)
+        num_failed = sum(t.status == TraceStatus.FAILED for t in st.traces)
         num_preempt = sum(max(t.prefill_count - 1, 0) for t in st.traces)
         wait_s = sum(t.wait_time for t in st.traces)
         metrics = RequestMetrics(
@@ -881,7 +975,9 @@ class Engine:
             slo_ttft_s=(st.req.slo.ttft_s if st.req.slo is not None
                         else None),
             slo_tpot_s=(st.req.slo.tpot_s if st.req.slo is not None
-                        else None))
+                        else None),
+            status=st.final_status,
+            failed_traces=num_failed)
         return RequestResult(
             request_id=st.request_id, answer=answer, traces=st.traces,
             latency_s=done - t_start,
@@ -891,5 +987,6 @@ class Engine:
             num_pruned=num_pruned,
             num_preemptions=num_preempt,
             peak_blocks_used=peak_blocks,
-            metrics=metrics)
+            metrics=metrics,
+            status=st.final_status)
 

@@ -38,7 +38,7 @@ another reference holder.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 
 @dataclasses.dataclass
@@ -51,6 +51,10 @@ class BlockManager:
         self._free: List[int] = list(range(1, self.num_blocks))  # 0=scratch
         self._free_set = set(self._free)  # O(1) membership / double-free check
         self._refcounts: Dict[int, int] = {}  # block id -> refs (live only)
+        self._open_reservations: Set["Reservation"] = set()  # not yet closed
+        # fault injection: when set, a True return vetoes the allocation
+        # (the allocator reports "full" without touching state)
+        self.fault_hook: Optional[Callable[[int], bool]] = None
 
     @property
     def scratch_block(self) -> int:
@@ -72,6 +76,8 @@ class BlockManager:
         return -(-n_tokens // self.block_size)
 
     def can_allocate(self, n_blocks: int) -> bool:
+        if self.fault_hook is not None and self.fault_hook(n_blocks):
+            return False
         return len(self._free) >= n_blocks
 
     def allocate(self, n_blocks: int) -> Optional[List[int]]:
@@ -131,6 +137,20 @@ class BlockManager:
         assert not (self._free_set & self._refcounts.keys())
         assert len(self._free) + len(self._refcounts) == self.num_blocks - 1
 
+    @property
+    def open_reservations(self) -> int:
+        return len(self._open_reservations)
+
+    def check_integrity(self, expect_open_reservations: int = 0) -> None:
+        """Post-fault invariant audit: refcount conservation plus no
+        orphaned (never-closed) reservations. Cheap enough to run after
+        every fault/cancel path."""
+        self.check_invariants()
+        assert len(self._open_reservations) == expect_open_reservations, \
+            (f"{len(self._open_reservations)} reservation(s) left open "
+             f"(expected {expect_open_reservations}) — an exception path "
+             f"skipped commit/abort")
+
 
 class Reservation:
     """Incremental block holding for an in-flight (chunked) prefill.
@@ -149,6 +169,7 @@ class Reservation:
         self.total_blocks = total_blocks
         self.taken: List[int] = []
         self._closed = False
+        mgr._open_reservations.add(self)
 
     @property
     def num_taken(self) -> int:
@@ -174,6 +195,7 @@ class Reservation:
         """Close the reservation; the caller now owns the taken blocks."""
         assert not self._closed
         self._closed = True
+        self.mgr._open_reservations.discard(self)
         out = self.taken
         self.taken = []
         return out
@@ -182,6 +204,7 @@ class Reservation:
         """Cancel: return every taken block to the pool."""
         assert not self._closed
         self._closed = True
+        self.mgr._open_reservations.discard(self)
         if self.taken:
             self.mgr.free(self.taken)
             self.taken = []

@@ -53,6 +53,11 @@ class RequestMetrics:
     degraded_traces: int = 0         # traces shed by SLO admission
     slo_ttft_s: Optional[float] = None   # the request's SLO targets
     slo_tpot_s: Optional[float] = None   # (None = no objective attached)
+    # fault-tolerant serving: how the request ended ("completed" |
+    # "cancelled" | "deadline_exceeded" | "failed") and how many of its
+    # traces were quarantined/aborted by fault recovery.
+    status: str = "completed"
+    failed_traces: int = 0
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -95,10 +100,17 @@ class RequestMetrics:
 
 
 def percentiles(xs: Sequence[float],
-                ps: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
-    """Linear-interpolated percentiles as {"p50": ..., "p90": ...}."""
+                ps: Sequence[float] = (50, 90, 99)
+                ) -> Dict[str, Optional[float]]:
+    """Linear-interpolated percentiles as {"p50": ..., "p90": ...}.
+
+    An empty input yields ``None`` values (JSON ``null``), never NaN:
+    NaN survives a round-trip through ``json`` as the non-standard token
+    ``NaN`` and — worse — compares unequal to itself, so a regression
+    gate diffing two NaN-bearing payloads would silently pass. ``None``
+    fails loudly instead."""
     if not xs:
-        return {f"p{_fmt(p)}": float("nan") for p in ps}
+        return {f"p{_fmt(p)}": None for p in ps}
     vals = np.percentile([float(x) for x in xs], list(ps))
     return {f"p{_fmt(p)}": float(v) for p, v in zip(ps, vals)}
 
@@ -144,6 +156,11 @@ def summarize(metrics: Sequence[RequestMetrics],
         "requests_with_prefix_hit": sum(
             m.cached_tokens > 0 for m in metrics),
         "degraded_traces": sum(m.degraded_traces for m in metrics),
+        "num_cancelled": sum(m.status == "cancelled" for m in metrics),
+        "num_deadline_exceeded": sum(
+            m.status == "deadline_exceeded" for m in metrics),
+        "num_failed": sum(m.status == "failed" for m in metrics),
+        "failed_traces": sum(m.failed_traces for m in metrics),
         "slo": _slo_attainment(metrics),
     }
 
@@ -179,5 +196,7 @@ def summarize_by_tenant(metrics: Sequence[RequestMetrics],
     return {name: summarize(ms, ps) for name, ms in sorted(tenants.items())}
 
 
-def _mean(xs: Sequence[float]) -> float:
-    return sum(xs) / len(xs) if xs else float("nan")
+def _mean(xs: Sequence[float]) -> Optional[float]:
+    """Mean, or ``None`` for an empty input (same NaN-avoidance
+    rationale as ``percentiles``)."""
+    return sum(xs) / len(xs) if xs else None

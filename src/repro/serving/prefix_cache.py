@@ -218,11 +218,15 @@ class PrefixCache:
         """Trie-side invariants, in the spirit of
         ``BlockManager.check_invariants``."""
         seen = 0
+        block_ids = set()
         for node in self._nodes():
             assert node.key is not None and len(node.key) == self.block_size
             assert self.mgr.ref_count(node.block) >= 1, \
                 f"cached block {node.block} is dead"
             assert node.parent.children.get(node.key) is node
+            assert node.block not in block_ids, \
+                f"block {node.block} parked under two trie nodes"
+            block_ids.add(node.block)
             seen += 1
         assert seen == self._num_blocks, \
             f"cached_blocks={self._num_blocks} but trie holds {seen}"

@@ -66,3 +66,16 @@ class RequestQueue:
         while self._heap and self._heap[0][0] <= now:
             out.append(heapq.heappop(self._heap)[2])
         return out
+
+    def remove(self, request_id) -> Optional[object]:
+        """Withdraw a not-yet-arrived request (cancellation before
+        admission). O(n) scan + re-heapify — cancellation is rare.
+        Returns the removed request, or None if absent."""
+        for i, (_, _, req) in enumerate(self._heap):
+            if getattr(req, "request_id", None) == request_id:
+                entry = self._heap[i]
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return entry[2]
+        return None

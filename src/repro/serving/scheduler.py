@@ -70,6 +70,7 @@ same core:
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 from collections import deque
@@ -83,6 +84,7 @@ import numpy as np
 from repro.core.pruning import AdmissionPressure, DeepConfPolicy
 from repro.core.trace import Trace, TraceStatus
 from repro.data.arithmetic import extract_answer
+from repro.serving.faults import DeviceStepFault, FatalFaultError
 from repro.serving.queue import RequestQueue
 
 if TYPE_CHECKING:  # engine imports scheduler; never the reverse at runtime
@@ -160,6 +162,14 @@ class BurstDone(Event):
 @dataclasses.dataclass
 class Completion(Event):
     request_id: int
+
+
+@dataclasses.dataclass
+class Cancelled(Event):
+    """A request left the scheduler before finishing: released by
+    ``Engine.cancel`` or by its ``Request.deadline`` expiring."""
+    request_id: int
+    reason: str       # "cancelled" | "deadline_exceeded"
 
 
 # ---------------------------------------------------------------------------
@@ -497,6 +507,9 @@ class ReqState:
         self.admit_t: Optional[float] = None
         self.first_token_t: Optional[float] = None
         self.result = None           # Optional[RequestResult]
+        # lifecycle outcome, copied onto RequestResult/RequestMetrics:
+        # "completed" | "cancelled" | "deadline_exceeded" | "failed"
+        self.final_status = "completed"
 
     @property
     def request_id(self) -> int:
@@ -665,6 +678,14 @@ class SchedulerCore:
         self.tick = 0
         self._tokens_done = 0  # prefill + decode tokens (rate estimate)
 
+        # fault tolerance: the engine's injection plan (None = no
+        # injection), recovery policy, and cumulative stats ledger
+        self.plan = eng.fault_plan
+        self.recovery = eng.recovery
+        self.stats = eng.fault_stats
+        self._alloc_stalls = 0    # consecutive allocator-stalled rounds
+        self._fanout_shed = False  # persistent-alloc shed rung taken
+
         self.events: deque = deque()
         self.event_log: deque = deque(maxlen=4096)
 
@@ -723,6 +744,7 @@ class SchedulerCore:
             ChunkDone: self._on_chunk_done,
             BurstDone: self._on_burst_done,
             Completion: self._on_completion,
+            Cancelled: self._on_cancelled,
         }
         while True:
             if not self.events:
@@ -732,7 +754,13 @@ class SchedulerCore:
                 continue
             event = self.events.popleft()
             self._notify(event)
-            handlers[type(event)](event)
+            try:
+                handlers[type(event)](event)
+            except FatalFaultError:
+                # retries and every degrade rung exhausted: fail the
+                # remaining requests, drain the pool, keep the engine
+                # usable — the loop then exits with no work left
+                self.abort_serve()
 
         for job in list(self.jobs.values()):  # defensive: no job survives
             job.abort()
@@ -747,6 +775,8 @@ class SchedulerCore:
         scheduling round if anything is runnable, otherwise sleep until
         the next arrival is due."""
         now_rel = self._now_rel()
+        if self._sweep_cancellations(now_rel):
+            return
         arrived = self.pending.pop_arrived(now_rel)
         if arrived:
             for req in arrived:
@@ -789,6 +819,24 @@ class SchedulerCore:
     def _on_budget_replenish(self, ev: BudgetReplenish) -> None:
         """One scheduling round: gates -> pressure -> admission wave ->
         write-block assurance -> decode dispatch."""
+        if self.plan is not None and self.plan.alloc_blocked(ev.tick):
+            # injected allocator outage: STALL the whole round (no
+            # admission, no decode) instead of reaching the memory-
+            # pressure machinery — a transient outage must not shift
+            # prune/preempt decisions, so survivors stay bit-identical.
+            # Persistent outages degrade (shed fan-out) and then abort.
+            self.stats.alloc_faults += 1
+            self._alloc_stalls += 1
+            if self._alloc_stalls == self.recovery.shed_after:
+                self.shed_fanout()
+                self.audit()
+            if self._alloc_stalls >= self.recovery.abort_after:
+                raise FatalFaultError(
+                    f"allocator unavailable for {self._alloc_stalls} "
+                    f"consecutive rounds")
+            time.sleep(self.recovery.backoff(self._alloc_stalls))
+            return
+        self._alloc_stalls = 0
         for st in self.started:
             st.update_gate()
         pressure = self.current_pressure()
@@ -920,6 +968,8 @@ class SchedulerCore:
                            if pcache is not None else 0),
             evictable_blocks=(pcache.evictable_blocks
                               if pcache is not None else 0),
+            degraded=(self.eng.force_horizon1 or self._fanout_shed
+                      or self.stats.degraded_to_dense > 0),
             **self.sched.pressure_extras(self))
 
     def handle_memory_full(self, needy: Optional[Trace], rid: int,
@@ -976,6 +1026,204 @@ class SchedulerCore:
         self.release(trace, TraceStatus.FINISHED)
 
     # ------------------------------------------------------------------
+    # fault tolerance: cancellation, retry/degrade, recovery
+    # ------------------------------------------------------------------
+    def _sweep_cancellations(self, now_rel: float) -> bool:
+        """Fire ``Cancelled`` events for requests flagged by
+        ``Engine.cancel`` and for requests past their deadline (arrived
+        or still pending). Runs at the top of every pump iteration;
+        returns True if anything was emitted so the events are handled
+        before the next scheduling round."""
+        fired = False
+        for rid in list(self.eng._cancel_requests):
+            self.eng._cancel_requests.discard(rid)
+            st = self.by_req.get(rid)
+            if st is not None and st.result is None:
+                self.emit(Cancelled(t=now_rel, request_id=rid,
+                                    reason="cancelled"))
+                fired = True
+        for st in self.states:
+            ddl = getattr(st.req, "deadline", None)
+            if ddl is not None and st.result is None and now_rel >= ddl:
+                self.emit(Cancelled(t=now_rel, request_id=st.request_id,
+                                    reason="deadline_exceeded"))
+                fired = True
+        return fired
+
+    def _on_cancelled(self, ev: Cancelled) -> None:
+        st = self.by_req[ev.request_id]
+        if st.result is not None:
+            return  # finished between the sweep and delivery
+        if ev.reason == "deadline_exceeded":
+            self.stats.deadline_exceeded += 1
+        else:
+            self.stats.cancelled += 1
+        self.release_request(st, ev.reason)
+        self.audit()
+
+    def release_request(self, st: ReqState, status: str,
+                        trace_status: TraceStatus = TraceStatus.CANCELLED
+                        ) -> None:
+        """The single release path for cancellation/deadline/failure:
+        the request's traces, decode slots, prefill reservation,
+        cache-hit forks and prefix references all return to the pool,
+        and its result is finalized with ``status``. Traces already
+        FINISHED keep their output (a deadline'd request still votes
+        over whatever completed in time)."""
+        st.final_status = status
+        if not st.arrived:
+            # still pending: withdraw from the arrival queue and
+            # finalize immediately (no pool state exists yet)
+            self.pending.remove(st.request_id)
+            st.arrived = True
+            for t in st.traces:
+                t.status = trace_status
+            st.t_done = time.perf_counter()
+            st.result = self.eng._finalize(st, self.t_start, st.t_done,
+                                           self.peak_blocks)
+            self.emit(Completion(t=self._now_rel(),
+                                 request_id=st.request_id))
+            return
+        job = self.jobs.pop(st.request_id, None)
+        if job is not None:
+            job.abort()
+        if st.cache_hit is not None:
+            self.mgr.free(st.cache_hit[0])
+            st.cache_hit = None
+        for t in list(st.traces):
+            if not t.alive:
+                continue
+            if t in self.waiting:
+                self.waiting.remove(t)
+            self.release(t, trace_status)
+
+    def shed_fanout(self) -> None:
+        """Persistent-alloc degrade rung: shed WAITING trace fan-out
+        down to each request's SLO floor (``slo.min_traces``, else 1).
+        Mirrors ``apply_slo_admission`` — running lanes are never
+        touched, so survivors stay bit-identical."""
+        self._fanout_shed = True
+        for st in self.started:
+            if st.done():
+                continue
+            slo = getattr(st.req, "slo", None)
+            keep = max(slo.min_traces if slo is not None else 1, 1)
+            excess = sum(1 for t in st.traces if t.alive) - keep
+            for t in reversed(st.traces):
+                if excess <= 0:
+                    break
+                if t.status == TraceStatus.WAITING and t in self.waiting:
+                    self.waiting.remove(t)
+                    self.release(t, TraceStatus.PRUNED)
+                    st.degraded_traces += 1
+                    self.stats.shed_traces += 1
+                    excess -= 1
+
+    def abort_serve(self) -> None:
+        """Recovery exhausted: fail every unfinished request through
+        the normal release path, leaving the pool drained and the
+        engine reusable. The event loop exits cleanly afterwards."""
+        self.stats.aborted += 1
+        for st in self.states:
+            if st.result is None:
+                self.release_request(st, "failed",
+                                     trace_status=TraceStatus.FAILED)
+        self.waiting.clear()
+        self.audit()
+
+    def emergency_drain(self) -> None:
+        """Mid-serve crash cleanup (``serve_batch`` re-raises after):
+        abort reservations, free every live trace's blocks and prefix
+        holders, and drop the device pool — a crash mid-device-call may
+        leave donated buffers dead, so parked KV cannot be trusted.
+        The next serve starts from a freshly initialized, drained pool.
+        """
+        for job in list(self.jobs.values()):
+            job.abort()
+        self.jobs.clear()
+        for st in self.states:
+            if st.cache_hit is not None:
+                self.mgr.free(st.cache_hit[0])
+                st.cache_hit = None
+            for t in st.traces:
+                if not t.alive:
+                    continue
+                if t.blocks:
+                    self.mgr.free(t.blocks)
+                    t.blocks = []
+                if t.batch_slot >= 0:
+                    self.free_slots.append(t.batch_slot)
+                    t.batch_slot = -1
+                t.status = TraceStatus.FAILED
+            if st.result is None:
+                st.final_status = "failed"
+            if st.prefix is not None:
+                self.mgr.free(st.prefix.blocks)
+                st.prefix = None
+        self.running.clear()
+        self.waiting.clear()
+        if self.pcache is not None:
+            self.pcache.clear()   # parked KV may point into a dead pool
+        self.eng._kv_cache = None  # next serve re-inits the device pool
+
+    def audit(self) -> None:
+        """Invariant audit after a fault/cancel path: allocator
+        refcount conservation and no reservations open beyond the
+        in-flight prefill jobs' own."""
+        self.eng.check_integrity(expect_open_reservations=len(self.jobs))
+
+    def degrade_step(self) -> bool:
+        """Take the next persistent-step-fault degrade rung. Every rung
+        is token-identical by the engine's equivalence pins: kernel ==
+        dense (PR 5) first, then decode_horizon K == 1 (PR 3). Returns
+        False when the ladder is exhausted."""
+        if self.eng.degrade_to_dense():
+            return True
+        if self.K_cfg > 1 and not self.eng.force_horizon1:
+            self.eng.force_horizon1 = True
+            self.stats.degraded_horizon += 1
+            return True
+        return False
+
+    def device_call(self, thunk: Callable):
+        """Run one device step under the fault plan's step injection and
+        the retry/degrade recovery policy.
+
+        Injected ``DeviceStepFault``s are raised BEFORE the device call,
+        so no RNG is consumed and the donated KV pool is untouched — a
+        retry is bit-identical to the un-faulted call. ``thunk`` is
+        zero-arg and re-resolves the engine's jitted step on each
+        attempt, so a mid-ladder degrade (kernel->dense rebuild, the
+        horizon pin) takes effect on the very next retry. Real
+        exceptions propagate immediately (buffer donation makes a blind
+        retry unsafe); recovery exhaustion raises ``FatalFaultError``.
+        """
+        attempts = 0
+        faulted = False
+        while True:
+            try:
+                if self.plan is not None:
+                    self.plan.maybe_step_fault(self.tick)
+                out = thunk()
+            except DeviceStepFault:
+                faulted = True
+                attempts += 1
+                self.stats.step_faults += 1
+                if attempts <= self.recovery.retry_limit:
+                    self.stats.step_retries += 1
+                    time.sleep(self.recovery.backoff(attempts))
+                    continue
+                if self.degrade_step():
+                    attempts = 0
+                    continue
+                raise FatalFaultError(
+                    "device step still failing after retries and every "
+                    "degrade rung") from None
+            if faulted:
+                self.stats.recovered_steps += 1
+            return out
+
+    # ------------------------------------------------------------------
     # write-block assurance (COW / frontier)
     # ------------------------------------------------------------------
     def owns_write_block(self, trace: Trace, bidx: int) -> bool:
@@ -992,7 +1240,11 @@ class SchedulerCore:
         self.note_peak()
         if bidx < len(trace.blocks):
             old = trace.blocks[bidx]
-            self.cache = self.eng._copy_block(self.cache, old, blk[0])
+            try:
+                self.cache = self.eng._copy_block(self.cache, old, blk[0])
+            except BaseException:
+                self.mgr.free(blk)   # the fresh block must not leak
+                raise
             self.mgr.free([old])
             trace.blocks[bidx] = blk[0]
         else:
@@ -1080,10 +1332,11 @@ class SchedulerCore:
             toks[0, :c] = job.tokens[job.pos : job.pos + c]
             pos_arr = job.pos + np.arange(C, dtype=np.int32)[None, :]
             valid = (np.arange(C, dtype=np.int32)[None, :] < c)
-            logits, self.cache = eng._chunk_prefill(
-                eng.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(pos_arr), jnp.asarray(valid),
-                jnp.asarray(job.row[None, :], jnp.int32))
+            logits, self.cache = self.device_call(
+                lambda: eng._chunk_prefill(
+                    eng.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos_arr), jnp.asarray(valid),
+                    jnp.asarray(job.row[None, :], jnp.int32)))
             job.last_logits = logits[:, c - 1]
             job.pos += c
             budget.spend(c, tenant=tenant)
@@ -1136,7 +1389,12 @@ class SchedulerCore:
         t_pf = time.perf_counter()
         ids_arr = jnp.asarray(
             np.array(trace.prompt_tokens, np.int32)[None, :])
-        logits, kvs = eng._prefill(eng.params, ids_arr)
+        try:
+            logits, kvs = self.device_call(
+                lambda: eng._prefill(eng.params, ids_arr))
+        except BaseException:
+            self.mgr.free(blocks)   # the local holding must not leak
+            raise
         attn_kvs, slot_state = eng._split_prefill_kvs(kvs)
         self.cache = eng._write_prefix_kv(self.cache, attn_kvs, row,
                                           seq_len)
@@ -1200,7 +1458,10 @@ class SchedulerCore:
         self.block_tables[slot] = row
         t_pf = time.perf_counter()
         ids_arr = jnp.asarray(np.array(ids, np.int32)[None, :])
-        logits, kvs = eng._prefill(eng.params, ids_arr)
+        # trace.blocks/slot are already registered, so a fatal abort
+        # from here releases them through the normal trace path
+        logits, kvs = self.device_call(
+            lambda: eng._prefill(eng.params, ids_arr))
         cache_new = eng._write_prefill(self.cache, kvs, slot, row, len(ids))
         # next token continues from the last prefill logit
         self.positions[slot] = len(ids)
@@ -1464,6 +1725,10 @@ class SchedulerCore:
             if needed_new and not self.evict_for(needed_new + 1):
                 eng.horizon_fallbacks += 1
                 K_tick = 1
+        if eng.force_horizon1:
+            # persistent-fault degrade rung: every burst runs at K=1
+            # (token-identical by the K==1 equivalence pin)
+            K_tick = 1
 
         B = self.B
         limits = np.zeros((B,), np.int32)
@@ -1490,8 +1755,6 @@ class SchedulerCore:
                 self.dirty[name] = False
         limits_dev = (jnp.asarray(limits) if ss is None
                       else jax.device_put(limits, ss["lane"]))
-        decode_fn = eng.decode_fn(K_tick if K_tick == K_cfg else 1,
-                                  lanewise=self.mixed_sampling)
         extra = ()
         if self.mixed_sampling:
             if self.samp_dirty or self.samp_dev is None:
@@ -1501,17 +1764,37 @@ class SchedulerCore:
                                       ("temperature", "top_k", "top_p"))
                 self.samp_dirty = False
             extra = self.samp_dev
+
+        def decode_thunk():
+            # re-resolve the step each attempt: a mid-retry degrade
+            # (kernel->dense rebuild, horizon pin) must take effect on
+            # the next attempt. A K>1 limits row is valid for a K=1
+            # step — the lane simply emits one token.
+            K_eff = 1 if eng.force_horizon1 else K_tick
+            fn = eng.decode_fn(K_eff if K_eff == K_cfg else 1,
+                               lanewise=self.mixed_sampling)
+            return fn(eng.params, self.cache, self.dev["tokens"],
+                      self.dev["positions"], limits_dev,
+                      self.dev["block_tables"], eng._rng,
+                      eng.scorer_params, *extra)
+
         (toks_d, confs_d, scores_d, tv_d, sv_d, fin_tok, fin_pos,
-         self.cache, eng._rng) = decode_fn(
-            eng.params, self.cache, self.dev["tokens"],
-            self.dev["positions"], limits_dev, self.dev["block_tables"],
-            eng._rng, eng.scorer_params, *extra)
+         self.cache, eng._rng) = self.device_call(decode_thunk)
         # single host sync per round; .tolist() batches the per-trace
         # float()/int() conversions of the old per-token loop
         toks_h, confs_h, scores_h, tv_h, sv_h, ft_h, fp_h = (
             x.tolist() for x in jax.device_get(
                 (toks_d, confs_d, scores_d, tv_d, sv_d,
                  fin_tok, fin_pos)))
+        if self.plan is not None:
+            # NaN injection poisons the victim lane's HOST-synced
+            # confidences only — device state is untouched, so the
+            # other lanes are trivially unperturbed. The quarantine
+            # path in _on_burst_done detects and terminates the lane.
+            lanes = sorted((t.batch_slot, t.request_id)
+                           for t in self.running)
+            for slot in self.plan.nan_victims(ev.tick, lanes):
+                confs_h[slot] = [float("nan")] * len(confs_h[slot])
         self.dev["tokens"], self.dev["positions"] = fin_tok, fin_pos
         self.cur_tokens[:] = ft_h
         self.positions[:] = fp_h
@@ -1530,6 +1813,7 @@ class SchedulerCore:
         sweep (DeepConf / Slim-SC / STEP proactive pruning)."""
         toks_h, confs_h, scores_h, tv_h, sv_h = self._burst
         emitted = 0
+        quarantined = False
         for trace in list(self.running):
             st = self.by_req[trace.request_id]
             slot = trace.batch_slot
@@ -1539,6 +1823,19 @@ class SchedulerCore:
                 if not v:
                     break
                 n_emit += 1
+            # NaN/Inf quarantine: a poisoned burst (injected or a real
+            # numerical blow-up) must never fold into trace state —
+            # terminate the lane with a distinct status; the other
+            # lanes' device state never saw it
+            bad = any(not math.isfinite(c) for c in confs_h[slot][:n_emit])
+            if not bad and st.policy.uses_scorer:
+                bad = any(not math.isfinite(scores_h[slot][i])
+                          for i in range(n_emit) if sv_h[slot][i])
+            if bad:
+                self.stats.nan_quarantined += 1
+                quarantined = True
+                self.release(trace, TraceStatus.FAILED)
+                continue
             # scores belong to the hidden states of the iteration
             # INPUT tokens; score_valid marks the step boundaries
             # (input token == step_id) inside the emitted prefix
@@ -1560,6 +1857,8 @@ class SchedulerCore:
                 self.finish(trace)
         ev.tokens = emitted
         self._tokens_done += emitted
+        if quarantined:
+            self.audit()
 
         # signal-triggered termination (DeepConf / Slim-SC / STEP
         # proactive pruning under admission pressure)

@@ -1,0 +1,467 @@
+"""Fault-tolerant serving tests: deterministic fault injection
+(step/alloc/NaN), retry-with-backoff, the degrade ladder, cancellation +
+deadlines, and KV-pool integrity recovery.
+
+The load-bearing property throughout: the engine's determinism pins
+(kernel==dense, K==1) double as recovery levers, so every transient
+fault and every degrade rung must leave surviving lanes' tokens, scores
+and prune decisions BIT-IDENTICAL to the fault-free run under a fixed
+RNG — and every fault/cancel path must leave the pool drained and the
+engine reusable."""
+import functools
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.registry import serving_config
+from repro.core.pruning import make_policy
+from repro.core.trace import TraceStatus
+from repro.data.tokenizer import get_tokenizer
+from repro.models.init import init_params
+from repro.serving import (DeviceStepFault, Engine, EngineConfig,
+                           FatalFaultError, FaultPlan, FaultSpec,
+                           RecoveryConfig, Request, SamplingParams)
+from repro.serving.kv_manager import BlockManager
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = serving_config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = get_tokenizer()
+    prompts = [tok.encode("3+5-2=", add_bos=True),
+               tok.encode("7*2+1=", add_bos=True)]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+def _ecfg(num_blocks=64, max_new=12, batch=8, horizon=1, faults=None,
+          temperature=0.0, seed=1234):
+    return EngineConfig(
+        max_batch=batch, num_blocks=num_blocks, capacity=128,
+        max_new_tokens=max_new, seed=seed, decode_horizon=horizon,
+        sampling=SamplingParams(temperature=temperature, top_k=0,
+                                top_p=1.0, max_new_tokens=max_new),
+        faults=faults)
+
+
+def _reqs(prompts, n=2, **extra):
+    return [Request(request_id=i, prompt_tokens=p, n_traces=n,
+                    policy=make_policy("sc"), **extra)
+            for i, p in enumerate(prompts)]
+
+
+def _snapshot(results):
+    return {r.request_id: ([(t.output_tokens, t.status, t.score)
+                            for t in r.traces], r.num_pruned)
+            for r in results}
+
+
+def _assert_clean(eng):
+    """Every fault/cancel path must leave the engine reusable."""
+    assert eng.pool_drained()
+    eng.check_integrity()
+
+
+# ---------------------------------------------------------------------------
+# plan grammar + recovery policy units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse("step@2x3, alloc@5, nan@7:slot=1, nan@9:req=0",
+                           seed=3)
+    kinds = [(s.kind, s.tick, s.count) for s in plan.specs]
+    assert kinds == [("step", 2, 3), ("alloc", 5, 1),
+                     ("nan", 7, 1), ("nan", 9, 1)]
+    assert plan.specs[2].slot == 1 and plan.specs[3].request_id == 0
+    assert "step@2x3" in repr(plan) and "seed=3" in repr(plan)
+
+
+@pytest.mark.parametrize("bad", [
+    "step", "step@", "step@x2", "bogus@3", "step@-1", "step@2x0",
+    "nan@3:lane=0", "nan@3:slot=a", "",
+])
+def test_fault_plan_parse_errors(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="oom", tick=1)
+    with pytest.raises(ValueError, match="count >= 1"):
+        FaultSpec(kind="step", tick=1, count=0)
+
+
+def test_step_fault_fires_until_count_drains():
+    plan = FaultPlan.parse("step@3x2")
+    plan.maybe_step_fault(1)  # below the arm tick: no fire
+    with pytest.raises(DeviceStepFault):
+        plan.maybe_step_fault(3)
+    with pytest.raises(DeviceStepFault):
+        plan.maybe_step_fault(7)  # armed specs follow the clock
+    plan.maybe_step_fault(8)      # drained
+    plan.reset()                  # re-armed for the next serve
+    with pytest.raises(DeviceStepFault):
+        plan.maybe_step_fault(3)
+
+
+def test_alloc_window_and_nan_victims():
+    plan = FaultPlan.parse("alloc@4x2, nan@6:req=1")
+    assert [plan.alloc_blocked(t) for t in range(3, 7)] == \
+        [False, True, True, False]
+    assert plan.nan_victims(6, []) == []            # victim absent: armed
+    assert plan.nan_victims(6, [(0, 0), (2, 1)]) == [2]
+    assert plan.nan_victims(7, [(0, 0), (2, 1)]) == []  # drained
+
+
+def test_backoff_is_capped_exponential():
+    rc = RecoveryConfig(backoff_base_s=0.001, backoff_cap_s=0.004)
+    assert [rc.backoff(a) for a in (1, 2, 3, 4, 9)] == \
+        [0.001, 0.002, 0.004, 0.004, 0.004]
+
+
+# ---------------------------------------------------------------------------
+# step faults: retry is bit-identical, degrade rungs are token-identical
+# ---------------------------------------------------------------------------
+
+def test_transient_step_fault_retry_consumes_no_rng(setup):
+    """Injected step faults raise BEFORE the device call, so retries
+    replay the identical call — even under stochastic sampling the
+    faulted engine's outputs match the fault-free engine token for
+    token."""
+    cfg, params, prompts = setup
+    snaps, engines = [], []
+    for faults in (None, "step@2x2"):
+        eng = Engine(params, cfg, _ecfg(temperature=0.8, faults=faults),
+                     make_policy("sc"))
+        snaps.append(_snapshot(eng.serve_batch(_reqs(prompts, n=2))))
+        engines.append(eng)
+    assert snaps[0] == snaps[1]
+    stats = engines[1].fault_stats
+    assert stats.step_faults == 2 and stats.step_retries == 2
+    assert stats.recovered_steps == 1
+    assert stats.degraded_to_dense == 0 and stats.degraded_horizon == 0
+    _assert_clean(engines[1])
+
+
+def test_persistent_step_fault_takes_horizon_rung(setup):
+    """Five consecutive failures exhaust the retry budget (3) and take
+    one degrade rung — on a dense-path engine that is the K->1 horizon
+    pin, which is token-identical by the decode-horizon equivalence."""
+    cfg, params, prompts = setup
+    ref = Engine(params, cfg, _ecfg(horizon=3), make_policy("sc"))
+    want = _snapshot(ref.serve_batch(_reqs(prompts, n=2)))
+
+    eng = Engine(params, cfg, _ecfg(horizon=3, faults="step@2x5"),
+                 make_policy("sc"))
+    assert not eng.use_kernel  # CPU host: the dense rung is unavailable
+    got = _snapshot(eng.serve_batch(_reqs(prompts, n=2)))
+    assert got == want
+    stats = eng.fault_stats
+    assert stats.step_faults == 5 and stats.recovered_steps == 1
+    assert stats.degraded_horizon == 1 and eng.force_horizon1
+    _assert_clean(eng)
+
+
+def test_fatal_step_fault_fails_batch_and_engine_stays_usable(setup):
+    """Retries and every rung exhausted: the serve aborts, every
+    unfinished request is released as "failed", and the SAME engine
+    serves the next batch normally."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(faults="step@1x50"),
+                 make_policy("sc"))
+    results = eng.serve_batch(_reqs(prompts, n=2))
+    assert [r.status for r in results] == ["failed", "failed"]
+    for r in results:
+        assert all(t.status == TraceStatus.FAILED for t in r.traces)
+        assert r.answer is None and r.metrics.status == "failed"
+        assert r.metrics.failed_traces == 2
+    assert eng.fault_stats.aborted == 1
+    _assert_clean(eng)
+
+    eng.fault_plan = None  # fault cleared: the engine must be reusable
+    ref = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    want = _snapshot(ref.serve_batch(_reqs(prompts, n=2)))
+    got = _snapshot(eng.serve_batch(_reqs(prompts, n=2)))
+    assert got == want
+    _assert_clean(eng)
+
+
+def test_fault_plan_replays_identically_across_serves(setup):
+    """FaultPlan.reset re-arms per serve: the same plan perturbs every
+    serve of an engine identically (replayable chaos)."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(faults="step@2x2"), make_policy("sc"))
+    first = _snapshot(eng.serve_batch(_reqs(prompts, n=2)))
+    second = _snapshot(eng.serve_batch(_reqs(prompts, n=2)))
+    assert first == second
+    assert eng.fault_stats.recovered_steps == 2  # one recovery per serve
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# allocation faults: stall -> shed -> abort
+# ---------------------------------------------------------------------------
+
+def test_transient_alloc_stall_preserves_outputs(setup):
+    """A short allocator outage stalls whole rounds instead of invoking
+    memory-pressure pruning: survivors are bit-identical and nothing is
+    shed."""
+    cfg, params, prompts = setup
+    snaps, engines = [], []
+    for faults in (None, "alloc@2"):
+        eng = Engine(params, cfg, _ecfg(faults=faults), make_policy("sc"))
+        snaps.append(_snapshot(eng.serve_batch(_reqs(prompts, n=2))))
+        engines.append(eng)
+    assert snaps[0] == snaps[1]
+    stats = engines[1].fault_stats
+    assert stats.alloc_faults == 1 and stats.shed_traces == 0
+    _assert_clean(engines[1])
+
+
+def test_persistent_alloc_shortage_sheds_fanout_then_recovers(setup):
+    """An outage past ``shed_after`` takes the fan-out rung: WAITING
+    traces shed down to each request's floor; once the allocator
+    returns, the survivors complete normally."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(faults="alloc@1x3"),
+                 make_policy("sc"))
+    results = eng.serve_batch(_reqs(prompts, n=3))
+    stats = eng.fault_stats
+    assert stats.alloc_faults == 3 and stats.shed_traces == 4
+    for r in results:
+        assert r.status == "completed"
+        assert r.metrics.degraded_traces == 2
+        assert sum(t.status == TraceStatus.FINISHED for t in r.traces) == 1
+        assert sum(t.status == TraceStatus.PRUNED for t in r.traces) == 2
+        survivor = next(t for t in r.traces
+                        if t.status == TraceStatus.FINISHED)
+        assert survivor.num_tokens > 0
+    _assert_clean(eng)
+
+
+def test_unrecoverable_alloc_shortage_aborts(setup):
+    """An outage past ``abort_after`` fails the batch through the
+    normal release path — drained pool, reusable engine."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(faults="alloc@1x99"),
+                 make_policy("sc"))
+    eng.recovery = RecoveryConfig(shed_after=2, abort_after=4,
+                                  backoff_base_s=1e-4, backoff_cap_s=1e-3)
+    results = eng.serve_batch(_reqs(prompts, n=2))
+    assert all(r.status == "failed" for r in results)
+    assert eng.fault_stats.aborted == 1
+    assert eng.fault_stats.alloc_faults == 4
+    _assert_clean(eng)
+    eng.fault_plan = None
+    ok = eng.serve_batch(_reqs(prompts, n=2))
+    assert all(r.status == "completed" for r in ok)
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine
+# ---------------------------------------------------------------------------
+
+def test_nan_burst_quarantines_lane_survivors_identical(setup):
+    """A poisoned burst terminates ONLY the victim lane (distinct
+    FAILED status); every surviving lane's tokens are bit-identical to
+    the fault-free run, and the poisoned prefix never folds into the
+    victim's state."""
+    cfg, params, prompts = setup
+    ref = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    want = ref.serve_batch(_reqs(prompts, n=2))
+
+    eng = Engine(params, cfg, _ecfg(faults="nan@4:slot=0"),
+                 make_policy("sc"))
+    got = eng.serve_batch(_reqs(prompts, n=2))
+    assert eng.fault_stats.nan_quarantined == 1
+    victim = got[0].traces[0]  # slot 0 = first admitted trace
+    assert victim.status == TraceStatus.FAILED
+    ref_victim = want[0].traces[0]
+    assert victim.output_tokens == \
+        ref_victim.output_tokens[:len(victim.output_tokens)]
+    assert len(victim.output_tokens) < len(ref_victim.output_tokens)
+    for r_got, r_want in zip(got, want):
+        for t_got, t_want in zip(r_got.traces, r_want.traces):
+            if t_got is victim:
+                continue
+            assert t_got.output_tokens == t_want.output_tokens
+            assert t_got.status == TraceStatus.FINISHED
+    assert got[0].metrics.failed_traces == 1
+    assert got[0].status == "completed"  # the survivor still completes
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# cancellation + deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_before_admission_and_unknown_id(setup):
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    eng.cancel(1)
+    eng.cancel(999)  # unknown ids are ignored
+    results = eng.serve_batch(_reqs(prompts, n=2))
+    assert results[0].status == "completed"
+    assert results[1].status == "cancelled"
+    assert all(t.status == TraceStatus.CANCELLED
+               for t in results[1].traces)
+    assert results[1].metrics.status == "cancelled"
+    assert eng.fault_stats.cancelled == 1
+    _assert_clean(eng)
+
+
+def test_cancel_mid_decode_from_completion_callback(setup):
+    """Engine.cancel is safe from an on_complete callback: the long
+    request is released mid-decode at the next pump sweep."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(max_new=48), make_policy("sc"))
+    reqs = [Request(request_id=0, prompt_tokens=prompts[0], n_traces=1,
+                    policy=make_policy("sc"), max_new_tokens=4),
+            Request(request_id=1, prompt_tokens=prompts[1], n_traces=2,
+                    policy=make_policy("sc"))]
+
+    def on_result(r):
+        if r.request_id == 0:
+            eng.cancel(1)
+
+    results = eng.serve_batch(reqs, on_complete=on_result)
+    assert results[0].status == "completed"
+    assert results[1].status == "cancelled"
+    assert all(t.status == TraceStatus.CANCELLED
+               for t in results[1].traces)
+    assert eng.fault_stats.cancelled == 1
+    _assert_clean(eng)
+
+
+def test_deadline_exceeded_releases_request(setup):
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    reqs = _reqs(prompts, n=2)
+    reqs[1].deadline = 0.0  # expires before it can arrive
+    results = eng.serve_batch(reqs)
+    assert results[0].status == "completed"
+    assert results[1].status == "deadline_exceeded"
+    assert results[1].metrics.status == "deadline_exceeded"
+    assert all(t.status == TraceStatus.CANCELLED
+               for t in results[1].traces)
+    assert eng.fault_stats.deadline_exceeded == 1
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# mid-serve crash: emergency drain + engine reuse
+# ---------------------------------------------------------------------------
+
+def test_real_exception_drains_pool_and_engine_recovers(setup):
+    """A REAL device exception (not an injected DeviceStepFault) is
+    never retried — buffer donation makes a blind retry unsafe. It
+    propagates, serve_batch drains everything, and the next serve
+    starts from a fresh device pool."""
+    cfg, params, prompts = setup
+    eng = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    orig = eng._prefill
+
+    def boom(*a, **k):
+        raise RuntimeError("device died")
+
+    eng._prefill = boom
+    with pytest.raises(RuntimeError, match="device died"):
+        eng.serve_batch(_reqs(prompts, n=2))
+    assert eng._kv_cache is None  # donated pool dropped, not stashed
+    _assert_clean(eng)
+
+    eng._prefill = orig
+    ref = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    want = _snapshot(ref.serve_batch(_reqs(prompts, n=2)))
+    got = _snapshot(eng.serve_batch(_reqs(prompts, n=2)))
+    assert got == want
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# properties: transient plans are invisible; the pool never leaks
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _pinned_pair():
+    cfg, params, _ = _setup()
+    plain = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    faulty = Engine(params, cfg, _ecfg(), make_policy("sc"))
+    return plain, faulty
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 8))
+def test_random_transient_plans_preserve_outputs(count, at):
+    """Property: any transient plan (step runs within the retry budget,
+    single-round alloc outages) is INVISIBLE in the outputs — same
+    tokens, statuses, scores, prune counts — and leaves the pool
+    drained."""
+    cfg, params, prompts = _setup()
+    plain, faulty = _pinned_pair()
+    faulty.fault_plan = FaultPlan.parse(
+        f"step@{at}x{count},alloc@{at + 1}")
+    snaps = []
+    for eng in (plain, faulty):
+        snaps.append(_snapshot(eng.serve_batch(_reqs(prompts, n=2))))
+        _assert_clean(eng)
+    assert snaps[0] == snaps[1]
+    assert not faulty.force_horizon1  # within budget: no rung taken
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 24),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7)),
+                max_size=50),
+       st.integers(0, 3))
+def test_pool_leak_free_under_injected_alloc_failures(num_blocks, ops,
+                                                      fail_mod):
+    """Property: take/commit/abort/fork/free interleaved with injected
+    allocation failures never leaks a block or orphans a reservation —
+    after closing everything the pool is exactly full and the integrity
+    audit is clean."""
+    mgr = BlockManager(num_blocks=num_blocks, block_size=4)
+    calls = [0]
+
+    def hook(n):  # deterministic outage pattern, density set by fail_mod
+        calls[0] += 1
+        return fail_mod > 0 and calls[0] % (fail_mod + 1) == 0
+
+    mgr.fault_hook = hook
+    held, open_res = [], []
+    for op, n in ops:
+        if op == 0:
+            blocks = mgr.allocate(n % 3 + 1)
+            if blocks is not None:
+                held.append(blocks)
+        elif op == 1 and held:
+            held.append(mgr.fork(held[n % len(held)]))
+        elif op == 2 and held:
+            mgr.free(held.pop(n % len(held)))
+        elif op == 3:
+            open_res.append(mgr.reserve(n % 4 + 1))
+        elif op == 4 and open_res:
+            res = open_res.pop(n % len(open_res))
+            res.take(min(res.remaining, n % 3))  # may fail under the hook
+            blocks = res.commit()
+            if blocks:
+                held.append(blocks)
+        elif op == 5 and open_res:
+            open_res.pop(n % len(open_res)).abort()
+        mgr.check_integrity(expect_open_reservations=len(open_res))
+    for res in open_res:
+        res.abort()
+    for h in held:
+        mgr.free(h)
+    mgr.fault_hook = None
+    assert mgr.free_blocks == num_blocks - 1
+    mgr.check_integrity()

@@ -113,6 +113,31 @@ def test_engine_config_from_env(monkeypatch):
     assert EngineConfig.from_env().max_batch == EngineConfig().max_batch
 
 
+def test_engine_config_from_env_rejects_malformed_values(monkeypatch):
+    """Malformed REPRO_* values fail loudly with the variable name and
+    the accepted range in the message — not a bare int() traceback."""
+    monkeypatch.setenv("REPRO_MAX_BATCH", "eight")
+    with pytest.raises(ValueError,
+                       match=r"REPRO_MAX_BATCH='eight'.*integer >= 1"):
+        EngineConfig.from_env()
+    monkeypatch.setenv("REPRO_MAX_BATCH", "0")  # parses, below the floor
+    with pytest.raises(ValueError,
+                       match=r"REPRO_MAX_BATCH='0'.*integer >= 1"):
+        EngineConfig.from_env()
+    monkeypatch.delenv("REPRO_MAX_BATCH")
+    monkeypatch.setenv("REPRO_NUM_BLOCKS", "1")  # block 0 is scratch
+    with pytest.raises(ValueError,
+                       match=r"REPRO_NUM_BLOCKS='1'.*integer >= 2"):
+        EngineConfig.from_env()
+    monkeypatch.setenv("REPRO_NUM_BLOCKS", "-3")
+    with pytest.raises(ValueError, match="REPRO_NUM_BLOCKS"):
+        EngineConfig.from_env()
+    monkeypatch.delenv("REPRO_NUM_BLOCKS")
+    monkeypatch.setenv("REPRO_SEED", "0")  # seed floor is 0, not 1
+    assert EngineConfig.from_env().seed == 0
+    monkeypatch.delenv("REPRO_SEED")
+
+
 def test_token_budget_semantics():
     assert TokenBudget(None).can(10**9)          # unlimited
     b = TokenBudget(5)

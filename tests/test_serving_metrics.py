@@ -1,7 +1,5 @@
 """Serving-metrics unit tests: TTFT/TPOT/e2e derivation, percentile
 interpolation, and the BENCH_serving.json summary payload."""
-import math
-
 import pytest
 
 from repro.serving.metrics import RequestMetrics, percentiles, summarize
@@ -25,7 +23,9 @@ def test_unfinished_request_has_none_latencies():
     m = RequestMetrics(request_id=1, arrival_s=0.0, admitted_s=None,
                        first_token_s=None, finished_s=None)
     assert m.ttft_s is None and m.tpot_s is None and m.e2e_s is None
-    assert math.isnan(summarize([m])["mean_ttft_s"])
+    # empty aggregates surface as None (JSON null), never NaN — NaN
+    # compares unequal to itself and would slip through regression diffs
+    assert summarize([m])["mean_ttft_s"] is None
 
 
 def test_single_token_tpot_does_not_divide_by_zero():
@@ -40,7 +40,7 @@ def test_percentiles_interpolate():
     assert p["p100"] == pytest.approx(4.0)
     assert p["p90"] == pytest.approx(3.7)
     assert percentiles([5.0])["p99"] == 5.0
-    assert math.isnan(percentiles([])["p50"])
+    assert percentiles([])["p50"] is None
 
 
 def test_summarize_payload():
