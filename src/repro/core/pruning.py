@@ -62,6 +62,13 @@ class AdmissionPressure:
     # policy may prune more conservatively — degraded capacity is
     # transient, not a demand signal.
     degraded: bool = False
+    # HBM bytes per KV block (pool storage + quantization scales; see
+    # kv_quant.pool_block_bytes). 0 when the publisher didn't wire byte
+    # accounting — the byte properties then report 0 and policies fall
+    # back to block counts. With quantized pools the same block budget
+    # costs ~4x fewer bytes, so byte-aware policies see the real HBM
+    # picture instead of a dtype-blind block tally.
+    bytes_per_block: int = 0
 
     @property
     def memory_utilization(self) -> float:
@@ -79,6 +86,21 @@ class AdmissionPressure:
     def demand(self) -> int:
         """Units of work contending for admission."""
         return self.waiting_traces + self.queued_requests
+
+    @property
+    def free_bytes(self) -> int:
+        """Free-list HBM bytes (0 when byte accounting is unwired)."""
+        return self.free_blocks * self.bytes_per_block
+
+    @property
+    def total_bytes(self) -> int:
+        """Allocatable pool HBM bytes (excludes the scratch block)."""
+        return self.total_blocks * self.bytes_per_block
+
+    @property
+    def reclaimable_bytes(self) -> int:
+        """Byte view of :attr:`reclaimable_blocks`."""
+        return self.reclaimable_blocks * self.bytes_per_block
 
 
 class PruningPolicy:

@@ -32,65 +32,88 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, cache_lens, *,
-                    scale: float):
+                    scale: float, k_scale=None, v_scale=None):
     return _paged.paged_attention(q, k_pool, v_pool, block_tables,
                                   cache_lens, scale=scale,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   interpret=_interpret())
 
 
 def paged_attention_prefill(q, k_pool, v_pool, block_tables, prefix_lens,
                             num_valid, own_k, own_v, *, scale: float,
-                            window: Optional[int] = None):
+                            window: Optional[int] = None,
+                            k_scale=None, v_scale=None):
     return _paged.paged_attention_prefill(
         q, k_pool, v_pool, block_tables, prefix_lens, num_valid,
-        own_k, own_v, scale=scale, window=window, interpret=_interpret())
+        own_k, own_v, scale=scale, window=window,
+        k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
 
 
 def paged_attention_sharded(mesh, q, k_pool, v_pool, block_tables,
-                            cache_lens, *, scale: float):
+                            cache_lens, *, scale: float,
+                            k_scale=None, v_scale=None):
     """Mesh decode: ``shard_map`` over the ("data",) trace batch with the
     pool's "model"-sharded KV heads handled shard-locally. Kernel grid
     cells are independent per (lane, kv head), so each shard runs the
     exact arithmetic of its slice of the single-device grid — the mesh
-    call is bit-identical to the unsharded kernel, no collectives."""
+    call is bit-identical to the unsharded kernel, no collectives.
+    Quantized pools add ``k_scale``/``v_scale`` [NB, page, KVH], sharded
+    with the pool's KV heads on "model"."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def local(q_, kp, vp, bt, lens):
-        return paged_attention(q_, kp, vp, bt, lens, scale=scale)
+    pool = P(None, None, "model", None)
+    in_specs = [P("data", "model", None), pool, pool,
+                P("data", None), P("data")]
+    operands = [q, k_pool, v_pool, block_tables, cache_lens]
+    if k_scale is not None:
+        in_specs += [P(None, None, "model"), P(None, None, "model")]
+        operands += [k_scale, v_scale]
+
+    def local(q_, kp, vp, bt, lens, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_attention(q_, kp, vp, bt, lens, scale=scale,
+                               k_scale=ks, v_scale=vs)
 
     return shard_map(
-        local, mesh=mesh,
-        in_specs=(P("data", "model", None), P(None, None, "model", None),
-                  P(None, None, "model", None), P("data", None), P("data")),
+        local, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=P("data", "model", None), check_rep=False,
-    )(q, k_pool, v_pool, block_tables, cache_lens)
+    )(*operands)
 
 
 def paged_attention_prefill_sharded(mesh, q, k_pool, v_pool, block_tables,
                                     prefix_lens, num_valid, own_k, own_v, *,
                                     scale: float,
-                                    window: Optional[int] = None):
+                                    window: Optional[int] = None,
+                                    k_scale=None, v_scale=None):
     """Mesh chunked prefill. Chunk jobs run one prompt at a time (batch
     1), so only the "model" axis does real work (heads shard-local);
     the batch-1 operands replicate over "data" and every data shard
-    computes the same tile."""
+    computes the same tile. Quantized pools add ``k_scale``/``v_scale``
+    [NB, page, KVH] sharded with the KV heads on "model"."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def local(q_, kp, vp, bt, pls, nv, ok, ov):
-        return paged_attention_prefill(q_, kp, vp, bt, pls, nv, ok, ov,
-                                       scale=scale, window=window)
-
     head = P(None, None, "model", None)
     pool = P(None, None, "model", None)
+    in_specs = [head, pool, pool, P(None, None), P(None), P(None),
+                head, head]
+    operands = [q, k_pool, v_pool, block_tables, prefix_lens, num_valid,
+                own_k, own_v]
+    if k_scale is not None:
+        in_specs += [P(None, None, "model"), P(None, None, "model")]
+        operands += [k_scale, v_scale]
+
+    def local(q_, kp, vp, bt, pls, nv, ok, ov, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_attention_prefill(q_, kp, vp, bt, pls, nv, ok, ov,
+                                       scale=scale, window=window,
+                                       k_scale=ks, v_scale=vs)
+
     return shard_map(
-        local, mesh=mesh,
-        in_specs=(head, pool, pool, P(None, None), P(None), P(None),
-                  head, head),
+        local, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=head, check_rep=False,
-    )(q, k_pool, v_pool, block_tables, prefix_lens, num_valid,
-      own_k, own_v)
+    )(*operands)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, head_group: int = 4,

@@ -60,23 +60,43 @@ NEG_INF = -1e30
 
 
 def _mq_paged_kernel(*refs, scale: float, page_size: int, num_pages: int,
-                     groups: int, window: Optional[int], has_own: bool):
+                     groups: int, window: Optional[int], has_own: bool,
+                     has_scales: bool):
     """Shared body. ``refs`` layout (scalar prefetch first):
 
-      decode : bt, lens, q, k_pool, v_pool, o, m, l, acc
-      prefill: bt, lens, nvalid, q, k_pool, v_pool, own_k, own_v,
+      decode : bt, lens, q, k_pool, v_pool, [k_scale, v_scale,]
                o, m, l, acc
+      prefill: bt, lens, nvalid, q, k_pool, v_pool,
+               [k_scale, v_scale,] own_k, own_v, o, m, l, acc
 
     ``lens[b]`` = number of valid pooled slots. For prefill (no
     wraparound: slot == position) this doubles as the chunk's start
     position, so query c sits at absolute position ``lens[b] + c``.
+
+    ``has_scales`` marks a quantized (int8/fp8) pool: ``k_scale``/
+    ``v_scale`` [NB, page, KVH] f32 live in HBM next to the pools
+    (``memory_space=ANY``) and each page tile is dequantized right
+    inside the online-softmax loop — cast to f32, multiply by its
+    per-(slot, kv-head) scale column — the identical math the dense
+    fallback applies to its gathered pages.
     """
+    refs = list(refs)
+    bt_ref, lens_ref = refs[0], refs[1]
+    i = 2
+    nvalid_ref = None
     if has_own:
-        (bt_ref, lens_ref, nvalid_ref, q_ref, k_pool_ref, v_pool_ref,
-         own_k_ref, own_v_ref, o_ref, m_s, l_s, acc_s) = refs
-    else:
-        (bt_ref, lens_ref, q_ref, k_pool_ref, v_pool_ref,
-         o_ref, m_s, l_s, acc_s) = refs
+        nvalid_ref = refs[i]
+        i += 1
+    q_ref, k_pool_ref, v_pool_ref = refs[i:i + 3]
+    i += 3
+    ks_ref = vs_ref = None
+    if has_scales:
+        ks_ref, vs_ref = refs[i], refs[i + 1]
+        i += 2
+    if has_own:
+        own_k_ref, own_v_ref = refs[i], refs[i + 1]
+        i += 2
+    o_ref, m_s, l_s, acc_s = refs[i:i + 4]
     b = pl.program_id(0)
     h = pl.program_id(1)
     p = pl.program_id(2)
@@ -118,6 +138,9 @@ def _mq_paged_kernel(*refs, scale: float, page_size: int, num_pages: int,
         v = v_pool_ref[block_id, pl.ds(0, page_size), h, :]
         k = k.astype(jnp.float32)              # [page, hd]
         v = v.astype(jnp.float32)
+        if has_scales:                         # in-loop dequantization
+            k = k * ks_ref[block_id, pl.ds(0, page_size), h][:, None]
+            v = v * vs_ref[block_id, pl.ds(0, page_size), h][:, None]
         q = q_ref[0, 0].astype(jnp.float32)    # [C*G, hd]
 
         s = jax.lax.dot_general(
@@ -168,19 +191,23 @@ def _mq_paged_kernel(*refs, scale: float, page_size: int, num_pages: int,
 
 
 def _mq_paged_call(qf, k_pool, v_pool, block_tables, lens, nvalid,
-                   own_k, own_v, *, scale, window, interpret):
+                   own_k, own_v, *, scale, window, interpret,
+                   k_scale=None, v_scale=None):
     """Dispatch the shared kernel. qf [B, KVH, C*G, hd] (flattened query
-    tile); own_k/own_v [B, KVH, C, hd] or None (decode)."""
+    tile); own_k/own_v [B, KVH, C, hd] or None (decode); k_scale/v_scale
+    [NB, page, KVH] f32 or None (full-precision pool)."""
     B, KVH, CG, hd = qf.shape
     page_size = k_pool.shape[1]
     bp = block_tables.shape[1]
     has_own = own_k is not None
+    has_scales = k_scale is not None
     C = own_k.shape[2] if has_own else 1
     groups = CG // C
 
     kernel = functools.partial(
         _mq_paged_kernel, scale=scale, page_size=page_size, num_pages=bp,
-        groups=groups, window=window, has_own=has_own)
+        groups=groups, window=window, has_own=has_own,
+        has_scales=has_scales)
 
     in_specs = [
         pl.BlockSpec((1, 1, CG, hd), lambda b, h, p, *_: (b, h, 0, 0)),
@@ -188,15 +215,23 @@ def _mq_paged_call(qf, k_pool, v_pool, block_tables, lens, nvalid,
         pl.BlockSpec(memory_space=pltpu.ANY),
     ]
     operands = [block_tables, lens]
-    num_prefetch = 2
+    if has_own:
+        operands.append(nvalid)
+    num_prefetch = len(operands)
+    if has_scales:
+        # per-slot dequant scales [NB, page, KVH]: block-addressed like
+        # the pools, so they stay in HBM and each grid step dynamically
+        # slices its page's scale column alongside the page tile
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY),
+                     pl.BlockSpec(memory_space=pltpu.ANY)]
     if has_own:
         in_specs += [
             pl.BlockSpec((1, 1, C, hd), lambda b, h, p, *_: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, C, hd), lambda b, h, p, *_: (b, h, 0, 0)),
         ]
-        operands.append(nvalid)
-        num_prefetch = 3
     operands += [qf, k_pool, v_pool]
+    if has_scales:
+        operands += [k_scale, v_scale]
     if has_own:
         operands += [own_k, own_v]
 
@@ -225,13 +260,16 @@ def _mq_paged_call(qf, k_pool, v_pool, block_tables, lens, nvalid,
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, cache_lens: jax.Array, *,
-                    scale: float, interpret: bool = False) -> jax.Array:
+                    scale: float, interpret: bool = False,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Decode: q [B, H, hd]; pools [NB, page, KVH, hd]; block_tables
     [B, bp]; cache_lens [B] valid slots. Returns [B, H, hd].
 
     The C = 1 specialization of the multi-query kernel — what the fused
     ``decode_horizon`` scan invokes once per iteration. ``cache_len == 0``
-    rows emit zeros (the engine's dead-slot convention)."""
+    rows emit zeros (the engine's dead-slot convention). ``k_scale``/
+    ``v_scale`` [NB, page, KVH] dequantize an int8/fp8 pool in-loop."""
     B, H, hd = q.shape
     KVH = k_pool.shape[2]
     G = H // KVH
@@ -239,7 +277,8 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     qg = q.reshape(B, KVH, G, hd)
     out = _mq_paged_call(qg, k_pool, v_pool, block_tables,
                          cache_lens, None, None, None,
-                         scale=scale, window=None, interpret=interpret)
+                         scale=scale, window=None, interpret=interpret,
+                         k_scale=k_scale, v_scale=v_scale)
     return out.reshape(B, H, hd)
 
 
@@ -250,7 +289,10 @@ def paged_attention_prefill(q: jax.Array, k_pool: jax.Array,
                             prefix_lens: jax.Array, num_valid: jax.Array,
                             own_k: jax.Array, own_v: jax.Array, *,
                             scale: float, window: Optional[int] = None,
-                            interpret: bool = False) -> jax.Array:
+                            interpret: bool = False,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None
+                            ) -> jax.Array:
     """Chunked prefill: q [B, C, H, hd] attends over the pooled prefix
     plus the chunk's own exact (un-roundtripped) KV.
 
@@ -260,8 +302,9 @@ def paged_attention_prefill(q: jax.Array, k_pool: jax.Array,
     absolute position ``prefix_lens[b] + c`` (positions are contiguous
     across the chunk, including right-padding). num_valid [B]: real
     (non-padded) tokens; padded queries emit zeros and padded own-KV
-    columns are masked. own_k/own_v [B, C, KVH, hd]. Returns
-    [B, C, H, hd].
+    columns are masked. own_k/own_v [B, C, KVH, hd]. ``k_scale``/
+    ``v_scale`` [NB, page, KVH] dequantize an int8/fp8 pool in-loop (the
+    chunk's own KV is exact and never scaled). Returns [B, C, H, hd].
     """
     B, C, H, hd = q.shape
     KVH = k_pool.shape[2]
@@ -273,6 +316,7 @@ def paged_attention_prefill(q: jax.Array, k_pool: jax.Array,
     ov = own_v.transpose(0, 2, 1, 3)
     out = _mq_paged_call(qf, k_pool, v_pool, block_tables,
                          prefix_lens, num_valid, ok, ov,
-                         scale=scale, window=window, interpret=interpret)
+                         scale=scale, window=window, interpret=interpret,
+                         k_scale=k_scale, v_scale=v_scale)
     return out.reshape(B, KVH, C, G, hd).transpose(0, 2, 1, 3, 4) \
         .reshape(B, C, H, hd)

@@ -82,6 +82,15 @@ def main():
                          "hosts; 'on' forces the kernels (interpret "
                          "mode on CPU — a correctness harness, not a "
                          "fast path there)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="paged KV pool storage dtype: bf16 (default) "
+                         "or f32 float pools, or int8/fp8 quantized "
+                         "pools with per-page scales — ~4x (int8 vs "
+                         "f32) more KV blocks in the same HBM budget, "
+                         "dequantized inside the attention kernel "
+                         "(default: bf16, or the REPRO_KV_DTYPE env "
+                         "override; see docs/SUPPORT_MATRIX.md)")
     ap.add_argument("--prefix-cache", default=None,
                     choices=["on", "off"],
                     help="cross-request prefix caching: park completed "
@@ -141,6 +150,7 @@ def main():
             args.use_kernel],
         **({} if args.prefix_cache is None
            else {"prefix_cache": args.prefix_cache == "on"}),
+        **({} if args.kv_dtype is None else {"kv_dtype": args.kv_dtype}),
         **({} if args.faults is None else {"faults": args.faults}))
     problems = make_problems(args.problems, seed=args.seed,
                              n_steps=tuple(args.difficulty))

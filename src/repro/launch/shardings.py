@@ -386,7 +386,8 @@ def serving_param_specs(cfg: ModelConfig, mesh, shapes_tree):
     return jax.tree_util.tree_map_with_path(one, shapes_tree)
 
 
-def serving_cache_specs(cfg: ModelConfig, mesh) -> dict:
+def serving_cache_specs(cfg: ModelConfig, mesh,
+                        kv_dtype: str = "bf16") -> dict:
     """PartitionSpecs for the engine's paged decode cache
     (``init_decode_cache`` keys; ``block_tables`` excluded — the tables
     are host-side scheduler state, uploaded data-sharded per tick).
@@ -399,6 +400,10 @@ def serving_cache_specs(cfg: ModelConfig, mesh) -> dict:
     recurrent state and cross-attention caches shard their batch dim
     over "data" with the lanes that own them. MLA's fused latent pool
     is replicated (the latent dim is contracted by every head).
+
+    Quantized pools (``kv_dtype`` int8/fp8) add per-slot scale arrays
+    ``k_scale``/``v_scale`` ``[L*, NB, bs, KVH]`` sharded exactly like
+    the pools they describe: KV heads over "model", blocks replicated.
 
     The MLA/ssm/hybrid/enc-dec branches record the INTENDED layout for
     archs ``Engine._place_on_mesh`` still refuses (NotImplementedError)
@@ -414,6 +419,10 @@ def serving_cache_specs(cfg: ModelConfig, mesh) -> dict:
             kvh = "model" if _div(cfg.num_kv_heads, model_n) else None
             out["k_pool"] = P(None, None, None, kvh, None)
             out["v_pool"] = P(None, None, None, kvh, None)
+            from repro.models.kv_quant import is_quantized
+            if is_quantized(kv_dtype):
+                out["k_scale"] = P(None, None, None, kvh)
+                out["v_scale"] = P(None, None, None, kvh)
     if cfg.arch_type in ("ssm", "hybrid"):
         out["ssm_state"] = P(None, "data", None, None, None)
         out["conv_state"] = P(None, "data", None, None)
@@ -443,7 +452,8 @@ def serving_prefill_kv_specs(cfg: ModelConfig, mesh) -> dict:
     return {k: NamedSharding(mesh, s) for k, s in out.items()}
 
 
-def serving_step_shardings(cfg: ModelConfig, mesh) -> dict:
+def serving_step_shardings(cfg: ModelConfig, mesh,
+                           kv_dtype: str = "bf16") -> dict:
     """The NamedSharding bundle the engine threads through its jitted
     steps (``Engine._build_steps``) and into
     ``multi_decode_step(shard_specs=...)``:
@@ -462,7 +472,7 @@ def serving_step_shardings(cfg: ModelConfig, mesh) -> dict:
       layer_pool  per-layer pool slices inside the layer scan
       replicated  RNG keys, scorer params, batch-1 prefill logits
     """
-    cache = serving_cache_specs(cfg, mesh)
+    cache = serving_cache_specs(cfg, mesh, kv_dtype)
     return {
         "lane": NamedSharding(mesh, P("data")),
         "table": NamedSharding(mesh, P("data", None)),

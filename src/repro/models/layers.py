@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import kv_quant as KQ
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +228,58 @@ def paged_kv_update(pool: jax.Array, block_tables: jax.Array,
     return pool.at[block_ids, offset].set(new_kv)
 
 
+def paged_kv_update_quant(pool: jax.Array, scale: jax.Array,
+                          block_tables: jax.Array,
+                          slot_positions: jax.Array,
+                          new_kv: jax.Array) -> tuple:
+    """Quantized-pool variant of :func:`paged_kv_update`.
+
+    pool [N_blocks, bs, KVH, hd] in int8/fp8 with per-(page, slot,
+    KV-head) f32 ``scale`` [N_blocks, bs, KVH]. The new token [B, KVH,
+    hd] is quantized against its own per-head absmax and its codes +
+    scales scattered into the written slot — no other slot is touched,
+    so the stored value is a pure function of the token (write paths
+    commute; see ``kv_quant``). Returns (new_pool, new_scale). Dead
+    lanes share the scratch block, whose content is never read
+    un-masked.
+    """
+    bs = pool.shape[1]
+    block_idx = slot_positions // bs
+    offset = slot_positions % bs
+    block_ids = jnp.take_along_axis(
+        block_tables, block_idx[:, None], axis=1)[:, 0]
+    q, ns = KQ.quantize_pages(new_kv, pool.dtype)  # [B,KVH,hd] / [B,KVH]
+    return (pool.at[block_ids, offset].set(q),
+            scale.at[block_ids, offset].set(ns))
+
+
+def paged_chunk_update_quant(pool: jax.Array, scale: jax.Array,
+                             block_tables: jax.Array, slot: jax.Array,
+                             valid: jax.Array, new_vals: jax.Array) -> tuple:
+    """Quantized-pool scatter for one prefill chunk.
+
+    pool [N_blocks, bs, KVH, hd] int8/fp8; scale [N_blocks, bs, KVH]
+    f32; slot [B, C]; valid [B, C]; new_vals [B, C, KVH, hd]. Each
+    chunk token is quantized against its own per-head absmax and its
+    codes + scales scattered into its slot (padded entries keep the old
+    content, mirroring :func:`paged_chunk_update`) — earlier chunks'
+    slots are never re-rounded, so chunked and one-shot prefill write
+    bit-identical pool content. Returns (new_pool, new_scale).
+    """
+    bs = pool.shape[1]
+    B, C = slot.shape
+    blk, offs = slot // bs, slot % bs
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    q, ns = KQ.quantize_pages(new_vals, pool.dtype)  # [B,C,KVH,*]
+    old_q = pool[block_tables][b_idx, blk, offs]     # [B, C, KVH, hd]
+    old_s = scale[block_tables][b_idx, blk, offs]    # [B, C, KVH]
+    q = jnp.where(valid[..., None, None], q, old_q)
+    ns = jnp.where(valid[..., None], ns, old_s)
+    bid = jnp.take_along_axis(block_tables, blk, axis=1)  # [B, C]
+    return (pool.at[bid, offs].set(q),
+            scale.at[bid, offs].set(ns))
+
+
 def _masked_softmax_pv(scores: jax.Array, mask: jax.Array,
                        v: jax.Array, pv_einsum: str) -> jax.Array:
     """Masked softmax + PV contraction, accumulated in f32, with the
@@ -249,7 +302,8 @@ def paged_attention_decode(pool_k: jax.Array, pool_v: jax.Array,
                            q: jax.Array, block_tables: jax.Array,
                            cache_lens: jax.Array, scale: float,
                            use_kernel: bool = False,
-                           kernel_mesh=None) -> jax.Array:
+                           kernel_mesh=None, k_scale=None,
+                           v_scale=None) -> jax.Array:
     """Decode attention over the paged pool.
 
     q [B, H, hd]; pools [N_blocks, bs, KVH, hd]; block_tables [B, bp];
@@ -258,22 +312,33 @@ def paged_attention_decode(pool_k: jax.Array, pool_v: jax.Array,
     ``kernel_mesh`` (with ``use_kernel``) routes through the shard_map
     wrapper: lanes shard over "data", the pool's KV heads over "model",
     each computed shard-locally (see ``kernels.ops``).
+
+    ``k_scale``/``v_scale`` [N_blocks, KVH] mark a quantized pool: the
+    gathered pages are dequantized (f32 cast then per-page scale) before
+    the score matmul — the same multiply the Pallas kernel applies in
+    its online-softmax loop, keeping both read paths aligned.
     """
     if use_kernel:
         from repro.kernels import ops as kops
         if kernel_mesh is not None:
             return kops.paged_attention_sharded(
                 kernel_mesh, q, pool_k, pool_v, block_tables, cache_lens,
-                scale=scale)
+                scale=scale, k_scale=k_scale, v_scale=v_scale)
         return kops.paged_attention(q, pool_k, pool_v, block_tables,
-                                    cache_lens, scale=scale)
+                                    cache_lens, scale=scale,
+                                    k_scale=k_scale, v_scale=v_scale)
     B, H, hd = q.shape
     bs = pool_k.shape[1]
     KVH = pool_k.shape[2]
     bp = block_tables.shape[1]
     # gather this sequence's blocks: [B, bp, bs, KVH, hd] -> [B, S, KVH, hd]
-    k = pool_k[block_tables].reshape(B, bp * bs, KVH, hd)
-    v = pool_v[block_tables].reshape(B, bp * bs, KVH, hd)
+    k = pool_k[block_tables]
+    v = pool_v[block_tables]
+    if k_scale is not None:
+        k = KQ.dequantize_pages(k, k_scale[block_tables])
+        v = KQ.dequantize_pages(v, v_scale[block_tables])
+    k = k.reshape(B, bp * bs, KVH, hd)
+    v = v.reshape(B, bp * bs, KVH, hd)
     group = H // KVH
     qg = q.reshape(B, KVH, group, hd)
     scores = jnp.einsum("bkgh,bskh->bkgs", qg, k,
@@ -290,8 +355,11 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     """One-token decode step with paged KV cache for one layer.
 
     x [B, 1, D]; positions [B]; cache holds k_pool/v_pool slices for THIS
-    layer plus block_tables, cache_lens, window metadata.
-    Returns (out [B,1,D], (new_k_pool, new_v_pool)).
+    layer plus block_tables, cache_lens, window metadata. When the cache
+    carries ``k_scale``/``v_scale`` the pool is quantized: writes go
+    through the page-requantize path and the attention read dequantizes.
+    Returns (out [B,1,D], (new_k_pool, new_v_pool)) — with the new
+    scales appended to the pool tuple on the quantized path.
     """
     B, _, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -311,8 +379,17 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
 
     window_len = cache["window_len"]  # python int: cache capacity (tokens)
     slot = jnp.where(window_len > 0, positions % window_len, positions)
-    pool_k = paged_kv_update(cache["k_pool"], cache["block_tables"], slot, k)
-    pool_v = paged_kv_update(cache["v_pool"], cache["block_tables"], slot, v)
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
+    if k_scale is None:
+        pool_k = paged_kv_update(cache["k_pool"], cache["block_tables"],
+                                 slot, k)
+        pool_v = paged_kv_update(cache["v_pool"], cache["block_tables"],
+                                 slot, v)
+    else:
+        pool_k, k_scale = paged_kv_update_quant(
+            cache["k_pool"], k_scale, cache["block_tables"], slot, k)
+        pool_v, v_scale = paged_kv_update_quant(
+            cache["v_pool"], v_scale, cache["block_tables"], slot, v)
     pool_spec = cache.get("pool_spec")
     if pool_spec is not None:
         # pin the updated per-layer pools to the serving-mesh layout so
@@ -321,17 +398,24 @@ def gqa_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
         # the scatter and drag an all-gather into every tick)
         pool_k = jax.lax.with_sharding_constraint(pool_k, pool_spec)
         pool_v = jax.lax.with_sharding_constraint(pool_v, pool_spec)
+        scale_spec = cache.get("scale_spec")
+        if k_scale is not None and scale_spec is not None:
+            k_scale = jax.lax.with_sharding_constraint(k_scale, scale_spec)
+            v_scale = jax.lax.with_sharding_constraint(v_scale, scale_spec)
     new_lens = jnp.minimum(positions + 1, window_len) if window_len > 0 \
         else positions + 1
     out = paged_attention_decode(
         pool_k, pool_v, q, cache["block_tables"], new_lens,
         scale=1.0 / math.sqrt(hd), use_kernel=cache.get("use_kernel", False),
-        kernel_mesh=cache.get("kernel_mesh"))
+        kernel_mesh=cache.get("kernel_mesh"),
+        k_scale=k_scale, v_scale=v_scale)
     out = out.reshape(B, 1, H * hd)
     if act_spec is not None:  # exact TP (see swiglu): gather heads first
         out = jax.lax.with_sharding_constraint(out, act_spec)
     out = out @ p["wo"]
-    return out, (pool_k, pool_v)
+    if k_scale is None:
+        return out, (pool_k, pool_v)
+    return out, (pool_k, pool_v, k_scale, v_scale)
 
 
 def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
@@ -341,7 +425,9 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
                                 window: Optional[int] = None,
                                 use_kernel: bool = False,
                                 kernel_mesh=None,
-                                pool_spec=None, act_spec=None) -> tuple:
+                                pool_spec=None, act_spec=None,
+                                k_scale=None, v_scale=None,
+                                scale_spec=None) -> tuple:
     """Prefill one chunk of a prompt against the paged KV cache.
 
     The continuous-batching engine splits long prompts into fixed-size
@@ -363,7 +449,12 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     Pallas paged kernel (``kernels.paged_attention_prefill``): no dense
     [B, KVH, G, C, bp*bs + C] score tensor, dead pool pages skipped.
     ``kernel_mesh`` adds the shard_map routing for mesh engines.
-    Returns (out [B, C, D], new_k_pool, new_v_pool).
+
+    ``k_scale``/``v_scale`` [N_blocks, KVH] mark a quantized pool: the
+    chunk's KV is written through the page-requantize scatter and the
+    pooled-prefix read dequantizes (the chunk's own KV stays exact in
+    both cases). Returns (out [B, C, D], new_k_pool, new_v_pool), with
+    (new_k_scale, new_v_scale) appended on the quantized path.
     """
     B, C, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -384,14 +475,26 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
 
     # scatter the chunk's KV into the pool (padded slots -> scratch 0)
     slot = positions % window_len                      # [B, C] == positions
-    block_ids = jnp.take_along_axis(block_tables, slot // bs, axis=1)
-    block_ids = jnp.where(valid, block_ids, 0)
-    offs = slot % bs
-    new_k_pool = k_pool.at[block_ids, offs].set(k)
-    new_v_pool = v_pool.at[block_ids, offs].set(v)
+    if k_scale is None:
+        block_ids = jnp.take_along_axis(block_tables, slot // bs, axis=1)
+        block_ids = jnp.where(valid, block_ids, 0)
+        offs = slot % bs
+        new_k_pool = k_pool.at[block_ids, offs].set(k)
+        new_v_pool = v_pool.at[block_ids, offs].set(v)
+        new_k_scale = new_v_scale = None
+    else:
+        new_k_pool, new_k_scale = paged_chunk_update_quant(
+            k_pool, k_scale, block_tables, slot, valid, k)
+        new_v_pool, new_v_scale = paged_chunk_update_quant(
+            v_pool, v_scale, block_tables, slot, valid, v)
     if pool_spec is not None:  # serving mesh: keep the pool layout pinned
         new_k_pool = jax.lax.with_sharding_constraint(new_k_pool, pool_spec)
         new_v_pool = jax.lax.with_sharding_constraint(new_v_pool, pool_spec)
+        if new_k_scale is not None and scale_spec is not None:
+            new_k_scale = jax.lax.with_sharding_constraint(
+                new_k_scale, scale_spec)
+            new_v_scale = jax.lax.with_sharding_constraint(
+                new_v_scale, scale_spec)
 
     if use_kernel:
         from repro.kernels import ops as kops
@@ -402,7 +505,8 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
         num_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
         args = (q, new_k_pool, new_v_pool, block_tables, prefix_lens,
                 num_valid, k, v)
-        kw = dict(scale=1.0 / math.sqrt(hd), window=window)
+        kw = dict(scale=1.0 / math.sqrt(hd), window=window,
+                  k_scale=new_k_scale, v_scale=new_v_scale)
         if kernel_mesh is not None:
             out = kops.paged_attention_prefill_sharded(kernel_mesh, *args,
                                                        **kw)
@@ -413,10 +517,15 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
         # keys/values = [pooled prefix (earlier chunks) ++ exact own
         # chunk]. The pool side is masked to positions strictly before
         # this chunk, so within-chunk attention never round-trips
-        # through the (bf16) pool — only the cross-chunk prefix does,
-        # exactly as decode reads it later.
-        kc = new_k_pool[block_tables].reshape(B, bp * bs, KVH, hd)
-        vc = new_v_pool[block_tables].reshape(B, bp * bs, KVH, hd)
+        # through the (bf16 or quantized) pool — only the cross-chunk
+        # prefix does, exactly as decode reads it later.
+        kc = new_k_pool[block_tables]
+        vc = new_v_pool[block_tables]
+        if new_k_scale is not None:
+            kc = KQ.dequantize_pages(kc, new_k_scale[block_tables])
+            vc = KQ.dequantize_pages(vc, new_v_scale[block_tables])
+        kc = kc.reshape(B, bp * bs, KVH, hd)
+        vc = vc.reshape(B, bp * bs, KVH, hd)
         keys = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
         vals = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
 
@@ -448,7 +557,9 @@ def gqa_attention_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array,
     if act_spec is not None:  # exact TP (see swiglu): gather heads first
         out = jax.lax.with_sharding_constraint(out, act_spec)
     out = out @ p["wo"]
-    return out, new_k_pool, new_v_pool
+    if new_k_scale is None:
+        return out, new_k_pool, new_v_pool
+    return out, new_k_pool, new_v_pool, new_k_scale, new_v_scale
 
 
 # ---------------------------------------------------------------------------

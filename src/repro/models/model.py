@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import kv_quant
 from repro.models import layers as L
 from repro.models.init import padded_vocab
 
@@ -325,6 +326,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
     else:  # dense / moe / vlm / enc-dec decoder
         has_cross = cfg.is_encoder_decoder
+        quant = "k_scale" in cache  # quantized paged pool (int8/fp8)
 
         def body(h, xs):
             if cfg.use_mla:
@@ -332,7 +334,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 cross = xs[2:] if has_cross else None
             else:
                 lp, k_pool, v_pool = xs[0], xs[1], xs[2]
-                cross = xs[3:] if has_cross else None
+                ksc, vsc = (xs[3], xs[4]) if quant else (None, None)
+                cross = xs[3 + 2 * quant:] if has_cross else None
             a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
             if cfg.use_mla:
                 a, new_pool = L.mla_attention_decode(
@@ -344,15 +347,16 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                      "act_spec": act})
                 out_pools = (new_pool,)
             else:
-                a, (nk, nv) = L.gqa_attention_decode(
+                a, out_pools = L.gqa_attention_decode(
                     lp["attn"], cfg, a_in, positions,
                     {"k_pool": k_pool, "v_pool": v_pool,
+                     "k_scale": ksc, "v_scale": vsc,
                      "block_tables": cache["block_tables"],
                      "window_len": window_len, "use_kernel": use_kernel,
                      "kernel_mesh": kmesh,
                      "pool_spec": layer_pool.get("k_pool"),
+                     "scale_spec": layer_pool.get("k_scale"),
                      "act_spec": act}, 0)
-                out_pools = (nk, nv)
             h = h + a
             if has_cross:
                 ck, cv = cross
@@ -371,13 +375,17 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
             xs = (params["layers"], cache["kv_pool"])
         else:
             xs = (params["layers"], cache["k_pool"], cache["v_pool"])
+            if quant:
+                xs = xs + (cache["k_scale"], cache["v_scale"])
         if has_cross:
             xs = xs + (cache["cross_k"], cache["cross_v"])
         h, out_pools = jax.lax.scan(body, h, xs)
         if cfg.use_mla:
             new_cache["kv_pool"] = out_pools[0]
         else:
-            new_cache["k_pool"], new_cache["v_pool"] = out_pools
+            new_cache["k_pool"], new_cache["v_pool"] = out_pools[:2]
+            if quant:
+                new_cache["k_scale"], new_cache["v_scale"] = out_pools[2:4]
 
     hidden = L.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)  # [B,D]
     if shard_specs is not None:
@@ -537,8 +545,11 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     assert supports_chunked_prefill(cfg), cfg.arch_type
     new_cache = dict(cache)
     window = cfg.sliding_window
+    quant = "k_scale" in cache  # quantized paged pool (int8/fp8)
     pool_spec = (None if shard_specs is None
                  else shard_specs["layer_pool"].get("k_pool"))
+    scale_spec = (None if shard_specs is None
+                  else shard_specs["layer_pool"].get("k_scale"))
     act = None if shard_specs is None else shard_specs["prefill_act"]
     kmesh = (shard_specs["lane"].mesh
              if use_kernel and shard_specs is not None else None)
@@ -551,24 +562,33 @@ def prefill_chunk_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     h = wsc_h(_embed(params, cfg, tokens))  # [B, C, D]
 
     def body(h, xs):
-        lp, k_pool, v_pool = xs
+        if quant:
+            lp, k_pool, v_pool, ksc, vsc = xs
+        else:
+            (lp, k_pool, v_pool), ksc, vsc = xs, None, None
         a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
-        a, nk, nv = L.gqa_attention_prefill_chunk(
+        res = L.gqa_attention_prefill_chunk(
             lp["attn"], cfg, a_in, positions, valid, k_pool, v_pool,
             cache["block_tables"], window_len, window=window,
             use_kernel=use_kernel, kernel_mesh=kmesh,
-            pool_spec=pool_spec, act_spec=act)
+            pool_spec=pool_spec, act_spec=act,
+            k_scale=ksc, v_scale=vsc, scale_spec=scale_spec)
+        a, pools = res[0], res[1:]
         h = h + a
         m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
         if cfg.uses_moe:
             m, _ = L.moe_layer(lp["moe"], cfg, m_in)
         else:
             m = L.swiglu(lp["mlp"], m_in, act_spec=act)
-        return wsc_h(h + m), (nk, nv)
+        return wsc_h(h + m), pools
 
-    h, (nk, nv) = jax.lax.scan(
-        body, h, (params["layers"], cache["k_pool"], cache["v_pool"]))
-    new_cache["k_pool"], new_cache["v_pool"] = nk, nv
+    xs = (params["layers"], cache["k_pool"], cache["v_pool"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    h, pools = jax.lax.scan(body, h, xs)
+    new_cache["k_pool"], new_cache["v_pool"] = pools[:2]
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = pools[2:4]
     hidden = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = _logits(params, cfg, hidden)
     return {"logits": logits, "hidden": hidden, "cache": new_cache}
@@ -703,26 +723,41 @@ def serve_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int,
                       num_blocks: Optional[int] = None,
-                      encoder_len: Optional[int] = None) -> dict:
+                      encoder_len: Optional[int] = None,
+                      kv_dtype: str = "bf16") -> dict:
     """Zeroed decode cache. ``capacity`` = per-sequence token capacity
     (the window). ``num_blocks`` sizes the shared pool; defaults to
-    batch * blocks_per_seq (dedicated blocks)."""
+    batch * blocks_per_seq (dedicated blocks). ``kv_dtype`` selects the
+    paged-pool storage (``f32|bf16|int8|fp8``; see ``models.kv_quant``);
+    quantized dtypes add ``k_scale``/``v_scale`` entries with one f32
+    scale per (layer, page, KV head). Recurrent and cross-attention
+    state always stays full precision."""
     bs = cfg.kv_block_size
     bp = -(-capacity // bs)
     nb = num_blocks if num_blocks is not None else batch * bp
     attn = cfg.attention_layer_ids()
     dt = jnp.bfloat16
+    pool_dt = kv_quant.kv_pool_dtype(kv_dtype)
     cache: dict = {}
     if attn:
         la = len(attn)
         if cfg.use_mla:
+            # MLA latent pool: f32/bf16 only (quantized dtypes are
+            # rejected upstream by kv_quant.resolve_kv_dtype)
             cache["kv_pool"] = jnp.zeros(
-                (la, nb, bs, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dt)
+                (la, nb, bs, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                pool_dt if kv_dtype in ("f32", "bf16") else dt)
         else:
             cache["k_pool"] = jnp.zeros(
-                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), dt)
+                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), pool_dt)
             cache["v_pool"] = jnp.zeros(
-                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), dt)
+                (la, nb, bs, cfg.num_kv_heads, cfg.head_dim), pool_dt)
+            scales = kv_quant.init_scales(cfg, nb, kv_dtype)
+            if scales is not None:
+                # distinct buffers: the jitted steps donate the whole
+                # cache dict, and XLA rejects donating one buffer twice
+                cache["k_scale"] = scales
+                cache["v_scale"] = scales + 0.0
         # default: sequence b owns blocks [b*bp, (b+1)*bp)
         cache["block_tables"] = (
             jnp.arange(batch * bp, dtype=jnp.int32).reshape(batch, bp)
@@ -792,6 +827,19 @@ def write_prefill_kv(cfg: ModelConfig, cache: dict, kvs,
                                    kvs[:, :, :, None, :])[:, :, :, 0, :]
         return cache
     k, v = kvs
+    if "k_scale" in cache:
+        # quantized pool: each token quantizes against its own per-head
+        # absmax (kv_quant.quantize_pages), then codes and scales
+        # scatter through the same indexing — the one-shot write is
+        # slot-for-slot identical to the chunked/decode write paths.
+        qd = cache["k_pool"].dtype
+        qk, sk = kv_quant.quantize_pages(k, qd)  # [L*,B,S,KVH,hd]/[...,KVH]
+        qv, sv = kv_quant.quantize_pages(v, qd)
+        cache["k_pool"] = scatter(cache["k_pool"], qk)
+        cache["k_scale"] = scatter(cache["k_scale"], sk)
+        cache["v_pool"] = scatter(cache["v_pool"], qv)
+        cache["v_scale"] = scatter(cache["v_scale"], sv)
+        return cache
     cache["k_pool"] = scatter(cache["k_pool"], k)
     cache["v_pool"] = scatter(cache["v_pool"], v)
     return cache
@@ -809,7 +857,9 @@ def copy_kv_block(cfg: ModelConfig, cache: dict, src: jax.Array,
     scalars so a single jitted instance serves every block pair.
     """
     cache = dict(cache)
-    for key in ("k_pool", "v_pool", "kv_pool"):
+    # per-page quant scales are block-addressed too: they ride the COW
+    # copy verbatim (the copied page's codes stay valid under its scale)
+    for key in ("k_pool", "v_pool", "kv_pool", "k_scale", "v_scale"):
         if key in cache:
             pool = cache[key]
             cache[key] = pool.at[:, dst].set(pool[:, src])

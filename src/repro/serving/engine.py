@@ -94,6 +94,8 @@ from repro.data.arithmetic import extract_answer
 from repro.core.scorer import scorer_score
 from repro.core.trace import Trace, TraceStatus
 from repro.data.tokenizer import get_tokenizer
+from repro.kernels import ops as kops
+from repro.models import kv_quant
 from repro.models.model import (copy_kv_block, forward_full,
                                 init_decode_cache, multi_decode_step,
                                 prefill_chunk_step, supports_chunked_prefill,
@@ -146,6 +148,16 @@ def _default_faults():
     touching test code."""
     val = os.environ.get("REPRO_FAULTS", "").strip()
     return val or None
+
+
+def _default_kv_dtype():
+    """``EngineConfig.kv_dtype`` default, overridable via the
+    ``REPRO_KV_DTYPE`` env var (``f32|bf16|int8|fp8``; unset/empty ->
+    "bf16", the historical pool dtype). The CI ``test-kv-quant`` lane
+    sets it to "int8" to run the whole engine suite on quantized pools
+    without touching test code. Validated against the model arch by
+    ``kv_quant.resolve_kv_dtype`` at engine construction."""
+    return os.environ.get("REPRO_KV_DTYPE", "").strip().lower() or "bf16"
 
 
 def resolve_use_kernel(setting, cfg: ModelConfig, mesh=None) -> bool:
@@ -247,6 +259,16 @@ class EngineConfig:
     # injection. Default from REPRO_FAULTS so the CI chaos lane can flip
     # whole test suites onto a fault plan without touching call sites.
     faults: Optional[str] = dataclasses.field(default_factory=_default_faults)
+    # Paged-pool storage dtype: "f32" | "bf16" (default, the historical
+    # pool dtype — pinned token/score/prune-identical to f32) | "int8" |
+    # "fp8" (quantized: per-page per-KV-head f32 scales, quantize on
+    # write, dequantize inside the attention read — dense and Pallas
+    # paths apply identical math; see models/kv_quant.py and
+    # docs/ENGINE.md "Quantized KV pool"). Quantized dtypes shrink
+    # bytes-per-block ~4x/2x vs f32/bf16, so the same HBM sustains
+    # proportionally more traces before the pruning policy fires.
+    # Default from REPRO_KV_DTYPE (the CI test-kv-quant lane sets int8).
+    kv_dtype: str = dataclasses.field(default_factory=_default_kv_dtype)
 
     # env var -> (field, parser, minimum); the single documented source
     # of truth for engine configuration from the environment
@@ -275,9 +297,10 @@ class EngineConfig:
         ``REPRO_CAPACITY``, ``REPRO_MAX_NEW_TOKENS``, ``REPRO_SEED``,
         ``REPRO_PREFILL_CHUNK``, ``REPRO_MAX_TOKENS_PER_STEP`` and
         ``REPRO_DECODE_HORIZON``; ``REPRO_USE_KERNEL`` /
-        ``REPRO_PREFIX_CACHE`` keep their existing semantics (they are
-        the dataclass default factories, so they apply to plain
-        ``EngineConfig()`` construction too). This is what
+        ``REPRO_PREFIX_CACHE`` / ``REPRO_FAULTS`` / ``REPRO_KV_DTYPE``
+        keep their existing semantics (they are the dataclass default
+        factories, so they apply to plain ``EngineConfig()``
+        construction too). This is what
         ``launch/serve.py``, ``evaluate_method(_batched)`` and the
         benchmarks build their configs through — one documented source
         of truth instead of scattered ``os.environ`` reads.
@@ -412,9 +435,16 @@ class Engine:
         self.tok = get_tokenizer()
         bs = cfg.kv_block_size
         self.blocks_per_seq = -(-ecfg.capacity // bs)
-        self.block_mgr = BlockManager(ecfg.num_blocks, bs)
-        self._rng = jax.random.PRNGKey(ecfg.seed)
         self._chunk_supported = supports_chunked_prefill(cfg)
+        # pool storage dtype: validated against the arch up front so an
+        # unsupported quantized setting fails at construction, and the
+        # per-block HBM cost flows into the allocator's byte accounting
+        # (AdmissionPressure reports real bytes, not just block counts)
+        kv_quant.resolve_kv_dtype(ecfg.kv_dtype, cfg, self._chunk_supported)
+        self.kv_block_bytes = kv_quant.pool_block_bytes(cfg, ecfg.kv_dtype)
+        self.block_mgr = BlockManager(ecfg.num_blocks, bs,
+                                      bytes_per_block=self.kv_block_bytes)
+        self._rng = jax.random.PRNGKey(ecfg.seed)
         # cross-request prefix cache: needs the shared-prefix holder (the
         # parked blocks ARE a holder that outlives its request) and the
         # chunked-prefill path (the suffix continues from cached KV)
@@ -502,7 +532,8 @@ class Engine:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
         pspecs = serving_param_specs(self.cfg, mesh, shapes)
         self.params = jax.device_put(self.params, to_named(mesh, pspecs))
-        self._ss = serving_step_shardings(self.cfg, mesh)
+        self._ss = serving_step_shardings(self.cfg, mesh,
+                                          self.ecfg.kv_dtype)
         self._prefill_kv_specs = serving_prefill_kv_specs(self.cfg, mesh)
         if self.scorer_params is not None:
             # the scorer is a tiny MLP: replicate it so step-score
@@ -522,6 +553,17 @@ class Engine:
 
         V = cfg.vocab_size  # mask vocab padding out of the sampler
         eos_id = self.tok.eos_id
+        # Fused step scorer: on the kernel path the scorer MLP runs as
+        # the Pallas step_score kernel inside the decode burst, so the
+        # [B, D] step-boundary hiddens feed the two matmuls from VMEM
+        # instead of round-tripping through a separate dense pass. The
+        # kernel computes the exact scorer_score graph (f32 matmuls,
+        # ReLU, sigmoid) — pinned score-identical in tests. Mesh engines
+        # keep the dense scorer: it is a shard-local matmul over the
+        # data-sharded hiddens, and a pallas_call under GSPMD would need
+        # its own shard_map plumbing for zero benefit at [B, D] sizes.
+        self.fused_scorer = bool(has_scorer and self.use_kernel
+                                 and ss is None)
         step_id = self.tok.step_id
 
         def mask_and_gather(logits):
@@ -565,8 +607,13 @@ class Engine:
                                block_tables, rng, scorer_params, *samp):
                 cache = dict(cache)
                 cache["block_tables"] = block_tables
-                score_fn = ((lambda h: scorer_score(scorer_params, h))
-                            if has_scorer else None)
+                if not has_scorer:
+                    score_fn = None
+                elif self.fused_scorer:
+                    score_fn = (lambda h:
+                                kops.step_score_params(h, scorer_params))
+                else:
+                    score_fn = (lambda h: scorer_score(scorer_params, h))
                 if lanewise:
                     temps, topks, topps = samp
 
@@ -633,6 +680,8 @@ class Engine:
         # Jitted so a mesh engine can pin the output pools back to the
         # canonical cache layout right at the write.
         pool_keys = ("kv_pool",) if cfg.use_mla else ("k_pool", "v_pool")
+        if kv_quant.is_quantized(ecfg.kv_dtype):
+            pool_keys += ("k_scale", "v_scale")
         wkv_kw = {}
         if ss is not None:
             wkv_kw["out_shardings"] = {
@@ -652,9 +701,12 @@ class Engine:
                 # chunk jobs run one prompt at a time (batch 1): the
                 # logits can't batch-shard, but the pools must come out
                 # in the serving layout the decode step expects
+                chunk_keys = ("k_pool", "v_pool")
+                if kv_quant.is_quantized(ecfg.kv_dtype):
+                    chunk_keys += ("k_scale", "v_scale")
                 cp_kw["out_shardings"] = (
                     ss["replicated"],
-                    {k: ss["pools"][k] for k in ("k_pool", "v_pool")})
+                    {k: ss["pools"][k] for k in chunk_keys})
 
             @partial(jax.jit, donate_argnums=(1,), **cp_kw)
             def chunk_prefill(params, cache, tokens, positions, valid,
@@ -795,7 +847,8 @@ class Engine:
         """Shared pool sized to the engine budget (not per-sequence)."""
         cache = init_decode_cache(
             self.cfg, self.ecfg.max_batch, self.ecfg.capacity,
-            num_blocks=self.ecfg.num_blocks)
+            num_blocks=self.ecfg.num_blocks,
+            kv_dtype=self.ecfg.kv_dtype)
         cache.pop("block_tables", None)
         if self._ss is not None:
             cache = {k: jax.device_put(v, self._ss["pools"][k])
@@ -841,8 +894,14 @@ class Engine:
         k, v = attn_kvs
         sub = {"k_pool": cache["k_pool"], "v_pool": cache["v_pool"],
                "block_tables": bt}
+        if "k_scale" in cache:  # quantized pools: scales ride along
+            sub["k_scale"] = cache["k_scale"]
+            sub["v_scale"] = cache["v_scale"]
         sub = self._write_kv(sub, (k, v), lens)
         cache["k_pool"], cache["v_pool"] = sub["k_pool"], sub["v_pool"]
+        if "k_scale" in sub:
+            cache["k_scale"] = sub["k_scale"]
+            cache["v_scale"] = sub["v_scale"]
         return cache
 
     def _write_slot_state(self, cache: dict, slot_state, slot: int) -> dict:

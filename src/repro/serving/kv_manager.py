@@ -45,6 +45,11 @@ from typing import Callable, Dict, List, Optional, Set
 class BlockManager:
     num_blocks: int
     block_size: int
+    # HBM bytes one block occupies on device (pool storage across all
+    # attention layers, plus per-page scales for quantized pools). 0 =
+    # unknown; the engine passes kv_quant.pool_block_bytes so pressure
+    # snapshots can report real bytes, not just block counts.
+    bytes_per_block: int = 0
 
     def __post_init__(self):
         assert self.num_blocks >= 2
@@ -71,6 +76,14 @@ class BlockManager:
     @property
     def utilization(self) -> float:
         return self.used_blocks / (self.num_blocks - 1)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.free_blocks * self.bytes_per_block
+
+    @property
+    def used_bytes(self) -> int:
+        return self.used_blocks * self.bytes_per_block
 
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)

@@ -970,6 +970,7 @@ class SchedulerCore:
                               if pcache is not None else 0),
             degraded=(self.eng.force_horizon1 or self._fanout_shed
                       or self.stats.degraded_to_dense > 0),
+            bytes_per_block=self.mgr.bytes_per_block,
             **self.sched.pressure_extras(self))
 
     def handle_memory_full(self, needy: Optional[Trace], rid: int,

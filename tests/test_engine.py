@@ -200,6 +200,17 @@ def test_prefix_cache_on_off_identity(setup):
     tokens, step scores and prune decisions are identical with the cache
     on vs off under fixed RNG (a hit serves bit-identical KV and the
     engine evicts parked blocks before any pruning decision)."""
+    from repro.models import kv_quant
+    if kv_quant.is_quantized(EngineConfig().kv_dtype):
+        # Exact on/off identity is a float-pool contract: a cache HIT
+        # recomputes the suffix reading the quantized prefix KV from the
+        # pool, while a MISS one-shot-prefills the whole prompt with
+        # exact hidden states — inherently divergent under a lossy
+        # dtype. tests/test_kv_quant.py covers prefix-cache correctness
+        # (hits occur, drains, bounded drift) for int8/fp8 pools.
+        pytest.skip("prefix-cache on/off identity pinned for float "
+                    "pools only (lossy kv_dtype hits re-read quantized "
+                    "prefix KV)")
     cfg, params, scorer, _ = setup
     tok = get_tokenizer()
     prompt = tok.encode("1+2-3+4-5+6-7+8=" * 2, add_bos=True)  # 33 toks

@@ -13,6 +13,17 @@ absorb at serving scale.
 Also covers ``use_kernel="auto"`` resolution (kernel on TPU, dense on
 CPU, dense fallback on uncovered meshes) and the ``REPRO_USE_KERNEL``
 env override the CI kernel lane uses.
+
+Under a quantized pool (``REPRO_KV_DTYPE=int8``/``fp8`` — the CI
+kv-quant lane) the identity contract narrows to what the paper's
+pruning decisions actually consume: tokens, prune counts, statuses and
+the answer stay EXACTLY equal, while step scores / token confidences
+are held to a tight drift bound instead of bitwise equality. The
+decode face stays bit-identical even quantized (bf16-grid scales keep
+``code * scale`` exact in f32), but the chunked-prefill face's
+online-softmax rescale is only bitwise-equal to the dense one-shot
+softmax when the pooled prefix holds the row max — quantization noise
+can flip near-ties, surfacing reduction-order ulps in confidences.
 """
 import dataclasses
 
@@ -24,11 +35,16 @@ from repro.core.pruning import make_policy
 from repro.core.scorer import init_scorer
 from repro.data.tokenizer import get_tokenizer
 from repro.models.init import init_params
+from repro.models import kv_quant
 from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
                            resolve_use_kernel)
 from repro.serving.engine import _default_use_kernel
 
 MAX_NEW = 24
+
+# CI's kv-quant lane re-runs this file under REPRO_KV_DTYPE=int8
+_QUANTIZED = kv_quant.is_quantized(EngineConfig().kv_dtype)
+_DRIFT = 1e-3
 
 
 @pytest.fixture(scope="module")
@@ -65,13 +81,25 @@ def _serve(setup, use_kernel, prompt_text, n_traces, seed, **ecfg_kw):
     return res
 
 
+def _close(xs, ys):
+    return len(xs) == len(ys) and all(
+        len(x) == len(y) and all(abs(u - v) <= _DRIFT for u, v in zip(x, y))
+        for x, y in zip(xs, ys))
+
+
 def _assert_identical(a, b):
     assert [t.output_tokens for t in a.traces] \
         == [t.output_tokens for t in b.traces]
-    assert [t.step_scores for t in a.traces] \
-        == [t.step_scores for t in b.traces]
-    assert [t.token_confidences for t in a.traces] \
-        == [t.token_confidences for t in b.traces]
+    sa = [t.step_scores for t in a.traces]
+    sb = [t.step_scores for t in b.traces]
+    ca = [t.token_confidences for t in a.traces]
+    cb = [t.token_confidences for t in b.traces]
+    if _QUANTIZED:  # bounded drift, see module docstring
+        assert _close(sa, sb)
+        assert _close(ca, cb)
+    else:
+        assert sa == sb
+        assert ca == cb
     assert [t.status for t in a.traces] == [t.status for t in b.traces]
     assert a.num_pruned == b.num_pruned
     assert a.answer == b.answer

@@ -294,13 +294,18 @@ def test_mesh_rejects_uncovered_archs():
     reductions the exactness layout doesn't constrain are refused."""
     cfg, params, scorer, _, _ = _setup()
     mesh = make_host_mesh(2, 2)
+    # pin a float pool: under REPRO_KV_DTYPE=int8 (the kv-quant CI
+    # lane) resolve_kv_dtype rejects these archs first with its own
+    # NotImplementedError — this test asserts the MESH rejection
+    # message; the quantized gating has its own pin in test_kv_quant.py
+    ecfg = dataclasses.replace(_ecfg(), kv_dtype="bf16")
     ssm_cfg = dataclasses.replace(cfg, arch_type="ssm")
     with pytest.raises(NotImplementedError, match="paged-attention"):
-        Engine(params, ssm_cfg, _ecfg(), make_policy("step"),
+        Engine(params, ssm_cfg, ecfg, make_policy("step"),
                scorer_params=scorer, mesh=mesh)
     mla_cfg = dataclasses.replace(cfg, use_mla=True)
     with pytest.raises(NotImplementedError, match="MLA/MoE"):
-        Engine(params, mla_cfg, _ecfg(), make_policy("step"),
+        Engine(params, mla_cfg, ecfg, make_policy("step"),
                scorer_params=scorer, mesh=mesh)
 
 
