@@ -1,0 +1,36 @@
+"""Drift-seeded engine config mirroring the real EngineConfig layout.
+
+Seeded drift: REPRO_UNDOCUMENTED is read but not in the README table
+(CFG001); _ENV_FIELDS maps REPRO_MAX_BATCH to a field that does not
+exist (CFG003); the REPRO_CAPACITY floor disagrees with the README
+(CFG003); prefix_cache is a bool flag no test references (CFG006).
+"""
+import dataclasses
+import os
+
+
+def _default_use_kernel():
+    return os.environ.get("REPRO_USE_KERNEL", "") == "1"
+
+
+def _default_kv_dtype():
+    return os.environ.get("REPRO_KV_DTYPE", "").strip() or "bf16"
+
+
+def _undocumented():
+    return os.environ.get("REPRO_UNDOCUMENTED", "")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 64
+    capacity: int = 512
+    use_kernel: "bool | str" = dataclasses.field(
+        default_factory=_default_use_kernel)
+    prefix_cache: bool = True
+    kv_dtype: str = dataclasses.field(default_factory=_default_kv_dtype)
+
+    _ENV_FIELDS = {
+        "REPRO_MAX_BATCH": ("max_batchz", int, 1),
+        "REPRO_CAPACITY": ("capacity", int, 1),
+    }

@@ -1,0 +1,2 @@
+"""Drift-seeded kv_quant surface."""
+KV_DTYPES = ("f32", "bf16", "int8", "fp8")

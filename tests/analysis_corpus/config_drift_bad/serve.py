@@ -1,0 +1,12 @@
+"""Drift-seeded launcher: the help text mentions REPRO_OLDFLAG, which
+nothing reads any more (CFG005)."""
+import argparse
+
+
+def build_parser():
+    p = argparse.ArgumentParser()
+    p.add_argument("--use-kernel",
+                   help="kernel path; env default REPRO_USE_KERNEL")
+    p.add_argument("--old-flag",
+                   help="removed; was env REPRO_OLDFLAG")
+    return p

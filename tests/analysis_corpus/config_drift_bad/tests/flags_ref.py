@@ -1,0 +1,6 @@
+"""Stand-in test file: references use_kernel and kv_dtype but not the
+cache toggle — seeding the CFG006 unguarded-flag finding."""
+
+
+def test_kernel_lane():
+    assert "use_kernel" and "kv_dtype"

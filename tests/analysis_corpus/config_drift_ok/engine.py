@@ -1,0 +1,27 @@
+"""Near-miss engine config: same layout as the drift-seeded tree but
+every surface agrees. Must produce no findings."""
+import dataclasses
+import os
+
+
+def _default_use_kernel():
+    return os.environ.get("REPRO_USE_KERNEL", "") == "1"
+
+
+def _default_kv_dtype():
+    return os.environ.get("REPRO_KV_DTYPE", "").strip() or "bf16"
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 64
+    capacity: int = 512
+    use_kernel: "bool | str" = dataclasses.field(
+        default_factory=_default_use_kernel)
+    prefix_cache: bool = True
+    kv_dtype: str = dataclasses.field(default_factory=_default_kv_dtype)
+
+    _ENV_FIELDS = {
+        "REPRO_MAX_BATCH": ("max_batch", int, 1),
+        "REPRO_CAPACITY": ("capacity", int, 2),
+    }

@@ -1,0 +1,11 @@
+"""Near-miss launcher: help mentions only vars something reads."""
+import argparse
+
+
+def build_parser():
+    p = argparse.ArgumentParser()
+    p.add_argument("--use-kernel",
+                   help="kernel path; env default REPRO_USE_KERNEL")
+    p.add_argument("--kv-dtype",
+                   help="pool dtype; env default REPRO_KV_DTYPE")
+    return p

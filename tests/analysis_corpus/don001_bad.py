@@ -1,0 +1,14 @@
+"""Seeded violation: donated buffer read after the call (DON001)."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(1,))
+def step(params, cache):
+    return cache
+
+
+def drive(params, cache):
+    new_cache = step(params, cache)
+    return cache, new_cache              # line 14: `cache` is dead here

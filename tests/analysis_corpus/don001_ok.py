@@ -1,0 +1,16 @@
+"""Near miss: the swap idiom — the donated arg is rebound from the
+call's result in the same statement. Must produce no findings."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(1,))
+def step(params, cache):
+    return cache
+
+
+def drive(params, cache):
+    cache = step(params, cache)
+    cache = step(params, cache)
+    return cache

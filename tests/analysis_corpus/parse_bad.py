@@ -1,0 +1,3 @@
+"""Seeded violation: file does not parse (PARSE)."""
+def broken(:
+    pass

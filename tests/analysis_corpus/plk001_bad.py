@@ -1,0 +1,19 @@
+"""Seeded violation: grid/BlockSpec disagreement (PLK001 x2)."""
+import jax  # noqa: F401  (pass gate: file must import jax)
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        # line 16: index_map takes 1 arg for a rank-2 grid
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        # line 18: index_map returns 2 indices for a rank-1 block
+        out_specs=pl.BlockSpec((128,), lambda i, j: (i, 0)),
+        out_shape=None,
+    )(x)

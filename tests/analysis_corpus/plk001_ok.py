@@ -1,0 +1,24 @@
+"""Near miss: arities line up, including the PrefetchScalarGridSpec
+idiom where `*_` absorbs the scalar-prefetch refs and a
+memory_space-only BlockSpec has no block shape to check. Must produce
+no findings."""
+import jax  # noqa: F401
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def kernel(s_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x, y, s):
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((128, 128), lambda i, j, *_: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j, *_: (i, j)),
+    )
+    return pl.pallas_call(kernel, grid_spec=spec, out_shape=None)(s, x, y)

@@ -1,0 +1,12 @@
+"""Seeded violation: Python loop bound reads a kernel ref (PLK002)."""
+import jax  # noqa: F401
+from jax.experimental import pallas as pl
+
+
+def kernel(lens_ref, x_ref, o_ref):
+    for i in range(lens_ref[0]):         # line 7: traced loop bound
+        o_ref[i] = x_ref[i]
+
+
+def run(x, lens):
+    return pl.pallas_call(kernel, grid=(1,), out_shape=None)(lens, x)

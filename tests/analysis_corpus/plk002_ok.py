@@ -1,0 +1,18 @@
+"""Near miss: static-range Python loops and lax.fori_loop over the
+traced bound are both fine. Must produce no findings."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(lens_ref, x_ref, o_ref):
+    for i in range(4):
+        o_ref[i] = x_ref[i]
+
+    def body(i, acc):
+        return acc + x_ref[i]
+
+    o_ref[0] = jax.lax.fori_loop(0, lens_ref[0], body, 0.0)
+
+
+def run(x, lens):
+    return pl.pallas_call(kernel, grid=(1,), out_shape=None)(lens, x)

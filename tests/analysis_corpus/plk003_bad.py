@@ -1,0 +1,21 @@
+"""Seeded violation: statically-resolvable VMEM scratch over the
+16 MiB budget (PLK003)."""
+import jax  # noqa: F401
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLK = 4096
+
+
+def kernel(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(                          # 64 MiB of f32
+        kernel,
+        grid=(4,),
+        scratch_shapes=[pltpu.VMEM((BLK, BLK), jnp.float32)],
+        out_shape=None,
+    )(x)

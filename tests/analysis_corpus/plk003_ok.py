@@ -1,0 +1,23 @@
+"""Near miss: small resolvable scratch fits the budget; a scratch with
+a non-literal dim is skipped (under-report, never guess). Must produce
+no findings."""
+import jax  # noqa: F401
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLK = 128
+
+
+def kernel(x_ref, o_ref, acc_ref, big_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x, dyn):
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        scratch_shapes=[pltpu.VMEM((BLK, BLK), jnp.float32),
+                        pltpu.VMEM((dyn, BLK), jnp.float32)],
+        out_shape=None,
+    )(x)

@@ -1,0 +1,9 @@
+"""Seeded violation: samplers consuming raw PRNGKeys (RNG001 x2)."""
+import jax
+
+
+def sample():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4,))   # line 6: inline
+    key = jax.random.PRNGKey(1)
+    y = jax.random.uniform(key, (4,))                    # line 8: raw var
+    return x, y

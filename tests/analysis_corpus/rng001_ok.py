@@ -1,0 +1,11 @@
+"""Near miss: raw keys only ever feed split; samplers eat derived
+keys. Must produce no findings."""
+import jax
+
+
+def sample():
+    key = jax.random.PRNGKey(0)
+    k0, k1 = jax.random.split(key)
+    x = jax.random.normal(k0, (4,))
+    y = jax.random.uniform(k1, (4,))
+    return x, y

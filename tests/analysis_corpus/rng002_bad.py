@@ -1,0 +1,15 @@
+"""Seeded violation: key value consumed twice (RNG002 x2)."""
+import jax
+
+
+def twice(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))    # line 7: second consumption
+    return x, y
+
+
+def looped(key):
+    out = []
+    for _ in range(4):
+        out.append(jax.random.normal(key, (4,)))   # line 14: loop reuse
+    return out

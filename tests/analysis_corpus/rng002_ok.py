@@ -1,0 +1,19 @@
+"""Near miss: consume-then-rebind and fold_in derivation — the two
+blessed idioms the engine uses. Must produce no findings."""
+import jax
+
+
+def twice(key):
+    key, k = jax.random.split(key)
+    x = jax.random.normal(k, (4,))
+    key, k = jax.random.split(key)
+    y = jax.random.uniform(k, (4,))
+    return x, y
+
+
+def looped(key):
+    out = []
+    for i in range(4):
+        k = jax.random.fold_in(key, i)
+        out.append(jax.random.normal(k, (4,)))
+    return out

@@ -1,0 +1,8 @@
+"""Seeded violation: a suppression comment that silences nothing
+(SUP001)."""
+import jax
+
+
+def sample(key):
+    x = jax.random.normal(key, (4,))     # repolint: disable=RNG002
+    return x

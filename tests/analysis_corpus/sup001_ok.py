@@ -1,0 +1,9 @@
+"""Near miss: the suppression is earned — it silences a real RNG002,
+so neither that finding nor SUP001 fires. Must produce no findings."""
+import jax
+
+
+def sample(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))    # repolint: disable=RNG002
+    return x, y

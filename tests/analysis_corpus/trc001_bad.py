@@ -1,0 +1,10 @@
+"""Seeded violation: Python `if` on a traced value (TRC001)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x):
+    if jnp.sum(x) > 0:                   # line 8: traced predicate
+        return x
+    return -x

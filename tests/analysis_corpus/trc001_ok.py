@@ -1,0 +1,12 @@
+"""Near miss: a static Python bool predicate inside a jitted body is
+how compiled variants specialize — not a tracing hazard. Must produce
+no findings."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x, flip=False):
+    if flip:
+        x = -x
+    return jnp.where(x > 0, x, 0.0)

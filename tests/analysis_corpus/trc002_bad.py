@@ -1,0 +1,11 @@
+"""Seeded violation: host escapes inside a traced body (TRC002 x3)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    v = x.max().item()                   # line 8: .item() sync
+    y = np.tanh(v)                       # line 9: host numpy
+    z = float(x[0])                      # line 10: cast on traced value
+    return y + z

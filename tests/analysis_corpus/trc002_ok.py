@@ -1,0 +1,15 @@
+"""Near miss: static-shape casts are fine in traced bodies, and host
+escapes outside traced bodies are fine everywhere. Must produce no
+findings."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x):
+    n = int(x.shape[0])
+    return jnp.sum(x) / n
+
+
+def host_summary(x):
+    return x.max().item()

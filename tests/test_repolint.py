@@ -1,0 +1,212 @@
+"""repolint: seeded-corpus detection, suppressions, baseline
+round-trip, and the repo-tree-is-clean acceptance pin.
+
+Every rule has one minimal positive (``*_bad``) and one near-miss
+negative (``*_ok``) under ``tests/analysis_corpus/``; the expected
+finding sets below are exact — a pass that stops detecting its seeded
+violation, or starts flagging the blessed idiom next to it, fails here
+before it ever reaches CI.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from tools.repolint.core import (Baseline, Context, load_py_files,
+                                 run_passes)
+from tools.repolint.passes import all_passes
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(ROOT, "tests", "analysis_corpus")
+
+# surface override pointing the config-surface pass at the fixture
+# mini-trees (same shape as the real repo layout)
+DRIFT_SURFACE = {
+    "engine": "engine.py",
+    "readme": "README.md",
+    "ci": "ci.yml",
+    "serve": "serve.py",
+    "tests_dir": "tests",
+    "src_dirs": ["."],
+    "kv_quant": "kv_quant.py",
+    "docs_support": "docs/SUPPORT_MATRIX.md",
+    "docs_benchmarks": "docs/BENCHMARKS.md",
+}
+
+
+def lint(root, paths, surface=None, select=None):
+    files, parse = load_py_files(root, paths)
+    ctx = Context(root=root, py_files=files, surface=surface)
+    return run_passes(ctx, all_passes(), select=select,
+                      parse_findings=parse)
+
+
+def rule_lines(findings):
+    return sorted((f.rule, f.line) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# per-rule corpus: exact positive sets, empty negative sets
+# ---------------------------------------------------------------------------
+
+EXPECTED = {
+    "rng001_bad.py": [("RNG001", 6), ("RNG001", 8)],
+    "rng002_bad.py": [("RNG002", 7), ("RNG002", 14)],
+    "don001_bad.py": [("DON001", 14)],
+    "trc001_bad.py": [("TRC001", 8)],
+    "trc002_bad.py": [("TRC002", 8), ("TRC002", 9), ("TRC002", 10)],
+    "plk001_bad.py": [("PLK001", 15), ("PLK001", 17)],
+    "plk002_bad.py": [("PLK002", 7)],
+    "plk003_bad.py": [("PLK003", 16)],
+    "sup001_bad.py": [("SUP001", 7)],
+    "parse_bad.py": [("PARSE", 2)],
+}
+
+
+def test_corpus_positives_exact():
+    for name, want in sorted(EXPECTED.items()):
+        got = rule_lines(lint(CORPUS, [name]))
+        assert got == sorted(want), (
+            f"{name}: expected exactly {sorted(want)}, got {got}")
+
+
+def test_corpus_negatives_clean():
+    ok_files = sorted(f for f in os.listdir(CORPUS)
+                      if f.endswith("_ok.py"))
+    assert len(ok_files) >= 9  # one near-miss per AST rule
+    for name in ok_files:
+        got = rule_lines(lint(CORPUS, [name]))
+        assert got == [], f"{name}: near-miss flagged: {got}"
+
+
+def test_config_drift_corpus_exact():
+    root = os.path.join(CORPUS, "config_drift_bad")
+    got = sorted((f.rule, f.path, f.line)
+                 for f in lint(root, ["."], surface=DRIFT_SURFACE))
+    assert got == sorted([
+        ("CFG001", "engine.py", 21),
+        ("CFG002", "README.md", 9),
+        ("CFG003", "README.md", 6),     # floor drift
+        ("CFG003", "engine.py", 34),    # nonexistent field
+        ("CFG004", "ci.yml", 7),
+        ("CFG005", "serve.py", 1),
+        ("CFG006", "engine.py", 30),    # prefix_cache unguarded
+        ("CFG007", "docs/BENCHMARKS.md", 3),
+        ("CFG007", "docs/SUPPORT_MATRIX.md", 3),
+    ])
+    ok_root = os.path.join(CORPUS, "config_drift_ok")
+    assert lint(ok_root, ["."], surface=DRIFT_SURFACE) == []
+
+
+def test_doc_links_corpus():
+    bad = lint(os.path.join(CORPUS, "doclinks_bad"), [])
+    assert sorted((f.rule, f.detail) for f in bad) == [
+        ("DOC001", "docs/nope.md"), ("DOC001", "missing.md")]
+    assert lint(os.path.join(CORPUS, "doclinks_ok"), []) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_used_suppression_silences_finding_without_sup001():
+    # sup001_ok seeds a real RNG002 and suppresses it: no findings at
+    # all (the suppression is used, so SUP001 stays quiet)
+    assert lint(CORPUS, ["sup001_ok.py"]) == []
+
+
+def test_select_restricts_rules():
+    got = lint(CORPUS, ["rng001_bad.py", "rng002_bad.py"],
+               select={"RNG002"})
+    assert sorted(f.rule for f in got) == ["RNG002", "RNG002"]
+
+
+def test_unused_suppression_not_reported_when_rule_unselected():
+    # with RNG002 not running, its suppression comment can't be judged
+    got = lint(CORPUS, ["sup001_bad.py"], select={"RNG001"})
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + staleness
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip_and_stale(tmp_path):
+    findings = lint(CORPUS, ["rng002_bad.py"])
+    assert len(findings) == 2
+    path = str(tmp_path / "baseline.json")
+    Baseline.from_findings(findings, reason="seeded corpus").save(path)
+
+    loaded = Baseline.load(path)
+    new, baselined, stale = loaded.apply(findings)
+    assert new == [] and len(baselined) == 2 and stale == []
+    # fingerprints are line-free: the entry survives an edit that only
+    # moves the finding
+    entry_fps = {e["fingerprint"] for e in loaded.entries}
+    assert entry_fps == {"RNG002::rng002_bad.py::key",
+                         "RNG002::rng002_bad.py::key@loop"}
+    assert all(f.fingerprint in entry_fps for f in findings)
+
+    # against a clean file every entry is stale
+    new2, base2, stale2 = loaded.apply(lint(CORPUS, ["rng002_ok.py"]))
+    assert new2 == [] and base2 == [] and len(stale2) == 2
+    assert all(e["reason"] == "seeded corpus" for e in stale2)
+
+
+def test_baseline_entries_require_reason(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps(
+        {"entries": [{"fingerprint": "RNG002::x.py::key"}]}))
+    try:
+        Baseline.load(str(path))
+    except ValueError as e:
+        assert "reason" in str(e)
+    else:
+        raise AssertionError("baseline without reason loaded")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the real tree is clean, through the real CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, cwd=ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repolint", *args],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_repo_src_is_clean_via_cli(tmp_path):
+    out = str(tmp_path / "repolint.json")
+    r = _run_cli("src/", "--out", out)
+    assert r.returncode == 0, r.stdout + r.stderr
+    report = json.loads(open(out).read())
+    assert report["counts"]["new"] == 0
+    assert report["counts"]["stale_baseline"] == 0
+    assert "RNG001" in report["rules"]
+
+
+def test_cli_reports_corpus_findings_nonzero():
+    r = _run_cli("tests/analysis_corpus/rng001_bad.py", "--no-baseline")
+    assert r.returncode == 1
+    assert "RNG001" in r.stdout
+
+
+def test_cli_list_rules_covers_every_pass():
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for code in ("RNG001", "RNG002", "DON001", "TRC001", "TRC002",
+                 "PLK001", "PLK002", "PLK003", "CFG001", "CFG007",
+                 "DOC001", "SUP001", "PARSE"):
+        assert code in r.stdout, f"{code} missing from --list-rules"
+
+
+def test_cli_bad_path_is_usage_error():
+    r = _run_cli("no/such/dir")
+    assert r.returncode == 2
+
+
+def test_doc_links_shim_still_works():
+    r = subprocess.run(
+        [sys.executable, os.path.join("tools", "check_doc_links.py")],
+        cwd=ROOT, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr

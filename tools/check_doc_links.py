@@ -1,91 +1,35 @@
-"""Docs link checker: every repo-relative path referenced from the
-markdown docs must exist, so renames/moves can't silently strand the
-documentation (the CI lint job runs this).
+"""Docs link checker — back-compat shim over the repolint ``doc-links``
+pass (``tools/repolint/passes/doc_links.py``), which is where the logic
+now lives. Prefer the one front door:
 
-    python tools/check_doc_links.py
+    python -m tools.repolint src/          # doc-links runs with the rest
+    python -m tools.repolint --select DOC001
 
-Checked references:
-  * markdown links ``[text](target)`` with non-URL targets;
-  * backticked repo paths like ``docs/ENGINE.md``, ``benchmarks/foo.py``
-    or ``tests/test_x.py::test_y`` (the ``::test`` suffix and brace
-    expansions like ``serving/{engine,queue}.py`` are resolved).
-
-Anchors (``#section``) and external URLs are not validated.
+This script keeps the old CLI and output contract (``[BROKEN] doc:
+broken reference -> rel`` lines, exit 1 on any break) for anything
+still invoking it directly.
 """
 from __future__ import annotations
 
-import itertools
 import os
-import re
 import sys
 
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tools.repolint.passes.doc_links import broken_references, doc_files
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOC_FILES = ["README.md", "ROADMAP.md",
-             *(os.path.join("docs", f)
-               for f in sorted(os.listdir(os.path.join(ROOT, "docs")))
-               if f.endswith(".md"))]
-
-_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
-# backticked tokens that look like repo paths: start with a known
-# top-level dir and contain a slash or end in a known file extension
-_TICKED = re.compile(r"`([A-Za-z0-9_./{},:*-]+)`")
-_TOP_DIRS = ("src/", "tests/", "benchmarks/", "docs/", "tools/",
-             "examples/", ".github/")
-_TOP_FILES = ("README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
-              "CHANGES.md", "pyproject.toml")
-
-
-def _expand_braces(path: str) -> list[str]:
-    m = re.search(r"\{([^}]*)\}", path)
-    if not m:
-        return [path]
-    pre, post = path[: m.start()], path[m.end():]
-    return list(itertools.chain.from_iterable(
-        _expand_braces(pre + alt + post) for alt in m.group(1).split(",")))
-
-
-def _candidates(token: str) -> list[str]:
-    """Paths a backticked token implies, or [] if it isn't a path."""
-    token = token.split("::")[0]  # pytest node ids
-    if token in _TOP_FILES:
-        return [token]
-    if not token.startswith(_TOP_DIRS):
-        return []
-    if "*" in token:
-        return []  # glob-style mentions (BENCH_*.json) aren't paths
-    paths = _expand_braces(token)
-    # `serving/engine` style module mentions get a .py fallback
-    return [p for p in paths]
-
-
-def _exists(rel: str) -> bool:
-    p = os.path.join(ROOT, rel)
-    return os.path.exists(p) or os.path.exists(p + ".py")
 
 
 def main() -> int:
-    missing = []
-    for doc in DOC_FILES:
-        text = open(os.path.join(ROOT, doc), encoding="utf-8").read()
-        refs = set()
-        for m in _MD_LINK.finditer(text):
-            target = m.group(1).strip()
-            if "://" in target or target.startswith("mailto:"):
-                continue
-            # md links resolve relative to the doc's directory
-            base = os.path.dirname(doc)
-            refs.add(os.path.normpath(os.path.join(base, target)))
-        for m in _TICKED.finditer(text):
-            refs.update(_candidates(m.group(1)))
-        for rel in sorted(refs):
-            if not _exists(rel):
-                missing.append(f"{doc}: broken reference -> {rel}")
-    for line in missing:
-        print(f"[BROKEN] {line}")
-    if not missing:
-        print(f"checked {len(DOC_FILES)} docs: all repo-path "
+    docs = doc_files(ROOT)
+    findings = broken_references(ROOT, docs)
+    for f in findings:
+        print(f"[BROKEN] {f.path}: {f.message}")
+    if not findings:
+        print(f"checked {len(docs)} docs: all repo-path "
               f"references resolve")
-    return 1 if missing else 0
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""repolint — repo-specific static analysis for the identity pins.
+
+The serving engine's correctness story rests on invariants that generic
+linters cannot see: RNG key discipline (the bit-identity pins assume
+every key is consumed exactly once), donation safety (``donate_argnums``
+buffers must never be read after the call that consumed them), tracing
+safety (no host control flow on traced values inside jitted bodies),
+Pallas kernel shape agreement, and a configuration surface
+(``EngineConfig`` <-> ``REPRO_*`` env vars <-> README table <-> CI lanes
+<-> ``launch/serve.py`` flags) that must stay in sync by construction.
+
+``python -m tools.repolint src/`` runs every registered pass; see
+``docs/ANALYSIS.md`` for the rule catalogue, the suppression and
+baseline workflow, and how to add a pass.
+"""
+from tools.repolint.core import (Baseline, Context, Finding, LintPass,
+                                 load_py_files, run_passes)
+from tools.repolint.passes import all_passes
+
+__all__ = ["Baseline", "Context", "Finding", "LintPass", "all_passes",
+           "load_py_files", "run_passes"]

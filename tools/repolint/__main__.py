@@ -1,0 +1,7 @@
+"""``python -m tools.repolint`` entry point."""
+import sys
+
+from tools.repolint.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

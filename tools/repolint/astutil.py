@@ -1,0 +1,215 @@
+"""Shared AST helpers for repolint passes: import-alias resolution,
+stable expression identifiers, and literal folding."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+SCOPE_NODES = FUNC_NODES + (ast.ClassDef,)
+
+
+def import_map(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> dotted module path, from every import statement in
+    the file (module- or function-level)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else
+                    alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    return out
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` as a string for pure Name/Attribute chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Dotted path with the leading alias expanded through the import
+    map (``jr.split`` -> ``jax.random.split``)."""
+    path = dotted(node)
+    if path is None:
+        return None
+    head, _, rest = path.partition(".")
+    base = imports.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def expr_id(node: ast.AST) -> Optional[str]:
+    """A stable textual identity for simple value expressions: names,
+    attribute chains (``self._rng``) and constant-indexed subscripts
+    (``ks[0]``). None for anything fancier."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = expr_id(node.value)
+        return f"{base}.{node.attr}" if base else None
+    if isinstance(node, ast.Subscript):
+        base = expr_id(node.value)
+        sl = node.slice
+        if base and isinstance(sl, ast.Constant):
+            return f"{base}[{sl.value!r}]"
+        return None
+    return None
+
+
+def target_ids(node: ast.AST) -> List[str]:
+    """Textual ids bound by an assignment target (tuples flattened).
+    ``x[i] = ...`` binds the base name (the container mutates)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            out.extend(target_ids(elt))
+        return out
+    if isinstance(node, ast.Starred):
+        return target_ids(node.value)
+    if isinstance(node, ast.Subscript):
+        base = expr_id(node.value)
+        return [base] if base else []
+    eid = expr_id(node)
+    return [eid] if eid else []
+
+
+def stmt_targets(stmt: ast.stmt) -> List[str]:
+    """Ids (re)bound by this statement."""
+    if isinstance(stmt, ast.Assign):
+        out: List[str] = []
+        for t in stmt.targets:
+            out.extend(target_ids(t))
+        return out
+    if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        return target_ids(stmt.target)
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return target_ids(stmt.target)
+    if isinstance(stmt, ast.With):
+        out = []
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                out.extend(target_ids(item.optional_vars))
+        return out
+    return []
+
+
+def const_int(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    """Fold an int literal / resolvable name / simple arithmetic."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.BinOp):
+        lo, hi = const_int(node.left, env), const_int(node.right, env)
+        if lo is None or hi is None:
+            return None
+        if isinstance(node.op, ast.Mult):
+            return lo * hi
+        if isinstance(node.op, ast.Add):
+            return lo + hi
+        if isinstance(node.op, ast.Sub):
+            return lo - hi
+        if isinstance(node.op, ast.FloorDiv) and hi != 0:
+            return lo // hi
+        return None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand, env)
+        return -v if v is not None else None
+    return None
+
+
+def const_env(tree: ast.AST) -> Dict[str, int]:
+    """Module/function-level ``NAME = <int literal>`` bindings (a name
+    assigned more than once is dropped — its value is not static)."""
+    env: Dict[str, int] = {}
+    seen_twice = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            val = const_int(node.value, {})
+            if name in env or name in seen_twice:
+                env.pop(name, None)
+                seen_twice.add(name)
+            elif val is not None:
+                env[name] = val
+    return env
+
+
+def functions(tree: ast.AST) -> Iterator[FunctionNode]:
+    """Every function/method definition in the file, at any depth."""
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES):
+            yield node
+
+
+def body_statements(fn: FunctionNode) -> Iterator[ast.stmt]:
+    """The function's statements in source order, descending into
+    control-flow blocks but NOT into nested function/class scopes."""
+    def walk(body: List[ast.stmt]) -> Iterator[ast.stmt]:
+        for stmt in body:
+            yield stmt
+            if isinstance(stmt, SCOPE_NODES):
+                continue
+            for block in _child_blocks(stmt):
+                yield from walk(block)
+    yield from walk(fn.body)
+
+
+def _child_blocks(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    blocks = []
+    for field in ("body", "orelse", "finalbody"):
+        block = getattr(stmt, field, None)
+        if block:
+            blocks.append(block)
+    for handler in getattr(stmt, "handlers", []) or []:
+        blocks.append(handler.body)
+    return blocks
+
+
+def _stmt_expr_nodes(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Every expression node belonging to THIS statement: child
+    *statements* (compound-statement bodies, nested defs' bodies) are
+    skipped — ``body_statements`` visits those on their own — while
+    lambdas are included (they execute, possibly, as part of the
+    statement). Decorator/default expressions of a nested def do run in
+    the enclosing scope and are included."""
+    stack: List[ast.AST] = [stmt]
+    while stack:
+        node = stack.pop()
+        if node is not stmt and isinstance(node, ast.stmt):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def stmt_calls(stmt: ast.stmt) -> Iterator[ast.Call]:
+    """Call nodes evaluated by this statement (see ``_stmt_expr_nodes``
+    for the scoping rules)."""
+    for node in _stmt_expr_nodes(stmt):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def stmt_loads(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Name/Attribute/Subscript nodes in Load context evaluated by this
+    statement. Chains are yielded at every level (``self.cache['k']``
+    yields the subscript, the attribute and the name) so callers can
+    match at whichever granularity they track."""
+    for node in _stmt_expr_nodes(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)) \
+                and isinstance(getattr(node, "ctx", None), ast.Load):
+            yield node

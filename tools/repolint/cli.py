@@ -1,0 +1,166 @@
+"""repolint command line.
+
+    python -m tools.repolint [paths...]            # lint (default: src/)
+    python -m tools.repolint --list-rules          # rule inventory
+    python -m tools.repolint src/ --format json --out repolint.json
+    python -m tools.repolint src/ --select RNG001,RNG002
+    python -m tools.repolint src/ --update-baseline --reason "..."
+
+Exit codes: 0 clean (every finding suppressed or baselined, no stale
+baseline entries), 1 findings or stale baseline entries, 2 usage or
+internal error. ``--out`` always writes the JSON report (CI uploads it
+as an artifact) regardless of ``--format``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from tools.repolint.core import (Baseline, Context, load_py_files,
+                                 render_human, render_json, run_passes)
+from tools.repolint.passes import FRAMEWORK_RULES, all_passes
+
+_DEFAULT_BASELINE = os.path.join("tools", "repolint", "baseline.json")
+
+
+def _find_root(start: str) -> str:
+    """Nearest ancestor containing pyproject.toml (else ``start``)."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isfile(os.path.join(cur, "pyproject.toml")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.repolint",
+        description="repo-specific static analysis: RNG discipline, "
+                    "donation safety, tracing safety, Pallas kernel "
+                    "lint, config-surface drift, doc links")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files/directories to lint (default: src/)")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: nearest ancestor with "
+                        "pyproject.toml)")
+    p.add_argument("--format", choices=("human", "json"),
+                   default="human", dest="fmt")
+    p.add_argument("--out", default=None, metavar="FILE",
+                   help="also write the JSON report to FILE")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"baseline file (default: {_DEFAULT_BASELINE} "
+                        f"under the root; missing file = empty)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline: report every finding")
+    p.add_argument("--no-stale-check", action="store_true",
+                   help="don't fail on baseline entries that match no "
+                        "current finding")
+    p.add_argument("--select", default=None, metavar="RULES",
+                   help="comma-separated rule codes to run "
+                        "(e.g. RNG001,DON001)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print every rule with its pass and exit")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from the current "
+                        "findings (requires --reason)")
+    p.add_argument("--reason", default=None,
+                   help="reason recorded on --update-baseline entries")
+    p.add_argument("--vmem-budget", type=int, default=None,
+                   metavar="BYTES",
+                   help="per-pallas_call VMEM scratch budget for "
+                        "PLK003 (default 16 MiB)")
+    return p
+
+
+def _list_rules() -> str:
+    lines = []
+    for ps in all_passes():
+        for code, desc in sorted(ps.rules.items()):
+            lines.append(f"{code:8s} [{ps.name}] {desc}")
+    for code, desc in sorted(FRAMEWORK_RULES.items()):
+        lines.append(f"{code:8s} [framework] {desc}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+    if args.update_baseline and not args.reason:
+        print("repolint: --update-baseline requires --reason",
+              file=sys.stderr)
+        return 2
+
+    root = os.path.abspath(args.root) if args.root \
+        else _find_root(os.getcwd())
+    paths = args.paths or ["src"]
+    for p in paths:
+        if not os.path.exists(os.path.join(root, p)):
+            print(f"repolint: no such path under {root}: {p}",
+                  file=sys.stderr)
+            return 2
+
+    select = None
+    if args.select:
+        select = {r.strip() for r in args.select.split(",")
+                  if r.strip()}
+
+    options = {}
+    if args.vmem_budget is not None:
+        options["vmem_budget"] = args.vmem_budget
+
+    try:
+        py_files, parse_findings = load_py_files(root, paths)
+        ctx = Context(root=root, py_files=py_files, options=options)
+        passes = all_passes()
+        findings = run_passes(ctx, passes, select=select,
+                              parse_findings=parse_findings)
+    except Exception as e:  # internal error -> exit 2, not a crash
+        print(f"repolint: internal error: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 2
+
+    baseline_path = os.path.join(
+        root, args.baseline or _DEFAULT_BASELINE)
+    if args.no_baseline:
+        baseline = Baseline([])
+    else:
+        try:
+            baseline = Baseline.load(baseline_path)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"repolint: bad baseline: {e}", file=sys.stderr)
+            return 2
+
+    if args.update_baseline:
+        Baseline.from_findings(findings, args.reason).save(
+            baseline_path)
+        print(f"repolint: wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to "
+              f"{os.path.relpath(baseline_path, root)}")
+        return 0
+
+    new, baselined, stale = baseline.apply(findings)
+    if args.no_stale_check:
+        stale = []
+
+    if args.out:
+        report = render_json(new, baselined, stale, all_passes())
+        with open(os.path.join(root, args.out) if not
+                  os.path.isabs(args.out) else args.out,
+                  "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    if args.fmt == "json":
+        print(json.dumps(render_json(new, baselined, stale,
+                                     all_passes()), indent=2))
+    else:
+        print(render_human(new, baselined, stale))
+    return 1 if (new or stale) else 0

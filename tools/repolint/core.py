@@ -1,0 +1,325 @@
+"""repolint framework: findings, pass registry plumbing, suppressions,
+baseline handling and reporters.
+
+Contracts (pinned by ``tests/test_repolint.py``):
+
+* a finding is ``(rule, path, line, message, detail)``; its *fingerprint*
+  ``rule::path::detail-or-message`` is line-number-free so baselines
+  survive unrelated edits;
+* ``# repolint: disable=RULE[,RULE...]`` on a finding's line (or the
+  line directly above it) suppresses it; ``# repolint:
+  disable-file=RULE`` anywhere in the first 10 lines suppresses the rule
+  for the whole file. Suppressions that match no finding are themselves
+  findings (``SUP001``) so dead annotations can't accumulate;
+* the baseline file grandfathers findings by fingerprint, each entry
+  carrying a human ``reason``; baseline entries that no longer match any
+  finding are *stale* and fail the run (CI's stale-baseline check);
+* exit codes: 0 = clean (every finding suppressed or baselined, no stale
+  baseline entries), 1 = findings or stale baseline, 2 = usage/internal
+  error.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(r"#\s*repolint:\s*disable=([A-Za-z0-9_,\s]+)")
+_SUPPRESS_FILE_RE = re.compile(
+    r"#\s*repolint:\s*disable-file=([A-Za-z0-9_,\s]+)")
+_FILE_SUPPRESS_SCAN_LINES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``rule`` code, repo-relative ``path``, 1-based
+    ``line``, human ``message``, and an optional stable ``detail`` token
+    (a symbol / env-var name) used for line-free fingerprinting."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    detail: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.path}::{self.detail or self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "fingerprint": self.fingerprint}
+
+
+@dataclasses.dataclass
+class PyFile:
+    """A parsed Python source file plus its suppression annotations."""
+    path: str                    # repo-relative, posix separators
+    source: str
+    tree: ast.AST
+    lines: List[str]
+    # line (1-based) -> rule codes disabled on that line
+    suppressions: Dict[int, Set[str]]
+    file_suppressions: Set[str]
+
+    def suppressed(self, rule: str, line: int) -> Optional[int]:
+        """The annotation line that suppresses ``rule`` at ``line``
+        (same line or the line directly above), or None."""
+        if rule in self.file_suppressions:
+            return 0
+        for cand in (line, line - 1):
+            if rule in self.suppressions.get(cand, set()):
+                return cand
+        return None
+
+
+def parse_py_file(root: str, rel_path: str) -> Tuple[Optional[PyFile],
+                                                     Optional[Finding]]:
+    """Parse one file; a syntax error becomes a ``PARSE`` finding
+    instead of crashing the whole run."""
+    abs_path = os.path.join(root, rel_path)
+    with open(abs_path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        return None, Finding("PARSE", rel_path, e.lineno or 1,
+                             f"syntax error: {e.msg}")
+    lines = source.splitlines()
+    suppressions: Dict[int, Set[str]] = {}
+    file_suppressions: Set[str] = set()
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_FILE_RE.search(text)
+        if m and i <= _FILE_SUPPRESS_SCAN_LINES:
+            file_suppressions.update(
+                r.strip() for r in m.group(1).split(",") if r.strip())
+            continue
+        m = _SUPPRESS_RE.search(text)
+        if m:
+            suppressions.setdefault(i, set()).update(
+                r.strip() for r in m.group(1).split(",") if r.strip())
+    return PyFile(rel_path, source, tree, lines, suppressions,
+                  file_suppressions), None
+
+
+def load_py_files(root: str, paths: Sequence[str]
+                  ) -> Tuple[List[PyFile], List[Finding]]:
+    """Collect and parse every ``.py`` under ``paths`` (repo-relative
+    files or directories), skipping ``__pycache__``."""
+    rels: List[str] = []
+    for p in paths:
+        abs_p = os.path.join(root, p)
+        if os.path.isfile(abs_p):
+            rels.append(os.path.relpath(abs_p, root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(abs_p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    rels.append(os.path.relpath(
+                        os.path.join(dirpath, fn), root))
+    files, findings = [], []
+    for rel in sorted(set(rels)):
+        rel = rel.replace(os.sep, "/")
+        pf, err = parse_py_file(root, rel)
+        if err is not None:
+            findings.append(err)
+        else:
+            files.append(pf)
+    return files, findings
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a pass may look at. Repo-level passes (config-surface,
+    doc-links) read ``root`` directly; per-file passes iterate
+    ``py_files``. ``surface`` overrides the config-surface file layout
+    (tests point it at fixture trees); ``options`` carries tunables
+    (``vmem_budget`` bytes for PLK003)."""
+    root: str
+    py_files: List[PyFile] = dataclasses.field(default_factory=list)
+    surface: Optional[dict] = None
+    options: dict = dataclasses.field(default_factory=dict)
+
+
+class LintPass:
+    """Base class: subclasses set ``name``, ``rules`` (code -> one-line
+    description) and implement ``run``."""
+    name: str = ""
+    rules: Dict[str, str] = {}
+
+    def run(self, ctx: Context) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+FRAMEWORK_RULES = ("SUP001", "PARSE")
+
+
+def _selected_rules(passes: Sequence[LintPass],
+                    select: Optional[Set[str]]) -> Set[str]:
+    known = {code for p in passes for code in p.rules}
+    known.update(FRAMEWORK_RULES)
+    return known if not select else known & select
+
+
+def run_passes(ctx: Context, passes: Sequence[LintPass],
+               select: Optional[Set[str]] = None,
+               parse_findings: Sequence[Finding] = (),
+               ) -> List[Finding]:
+    """Run ``passes``, apply suppressions, and append ``SUP001`` for
+    annotations that suppressed nothing. ``select`` restricts to a set
+    of rule codes (pass-level: a pass runs if any of its rules is
+    selected)."""
+    selected = _selected_rules(passes, select)
+    raw: List[Finding] = [f for f in parse_findings
+                          if not select or f.rule in select]
+    for p in passes:
+        if not any(code in selected for code in p.rules):
+            continue
+        for f in p.run(ctx):
+            if f.rule in selected:
+                raw.append(f)
+
+    by_path = {pf.path: pf for pf in ctx.py_files}
+    kept: List[Finding] = []
+    # (path, annotation line or 0, rule) -> used?
+    used: Set[Tuple[str, int, str]] = set()
+    for f in raw:
+        pf = by_path.get(f.path)
+        if pf is None:
+            kept.append(f)
+            continue
+        at = pf.suppressed(f.rule, f.line)
+        if at is None:
+            kept.append(f)
+        else:
+            used.add((f.path, at, f.rule))
+    if "SUP001" in selected:
+        for pf in ctx.py_files:
+            ann = [(line, rule) for line, rules in pf.suppressions.items()
+                   for rule in sorted(rules)]
+            ann += [(0, rule) for rule in sorted(pf.file_suppressions)]
+            for line, rule in sorted(ann):
+                if rule not in selected or rule == "SUP001":
+                    continue  # rule didn't run -> can't judge the comment
+                if (pf.path, line, rule) not in used:
+                    kept.append(Finding(
+                        "SUP001", pf.path, max(line, 1),
+                        f"unused suppression: no {rule} finding is "
+                        f"silenced by this comment",
+                        detail=f"{rule}@{line}"))
+    kept.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    # branch-merging walkers may report one defect twice (e.g. a Try
+    # finalbody shared across merge arms); reports are de-duplicated
+    uniq, seen = [], set()
+    for f in kept:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+class Baseline:
+    """Checked-in grandfather list keyed by finding fingerprint. Every
+    entry must carry a ``reason`` saying why the finding is deliberately
+    kept rather than fixed."""
+
+    def __init__(self, entries: Optional[List[dict]] = None):
+        self.entries = entries or []
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls([])
+        with open(path, encoding="utf-8") as fh:
+            data = json.load(fh)
+        entries = data.get("entries", [])
+        for e in entries:
+            if "fingerprint" not in e or "reason" not in e:
+                raise ValueError(
+                    f"{path}: every baseline entry needs 'fingerprint' "
+                    f"and 'reason', got {e!r}")
+        return cls(entries)
+
+    def save(self, path: str) -> None:
+        payload = {
+            "comment": ("repolint baseline: grandfathered findings by "
+                        "fingerprint. Entries must carry a reason; stale "
+                        "entries (matching no current finding) fail the "
+                        "run — delete them when the finding is fixed."),
+            "entries": self.entries,
+        }
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    def apply(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+        """Split into (new, baselined) findings and stale entries."""
+        fps = {e["fingerprint"] for e in self.entries}
+        new = [f for f in findings if f.fingerprint not in fps]
+        baselined = [f for f in findings if f.fingerprint in fps]
+        seen = {f.fingerprint for f in findings}
+        stale = [e for e in self.entries if e["fingerprint"] not in seen]
+        return new, baselined, stale
+
+    @classmethod
+    def from_findings(cls, findings: Sequence[Finding],
+                      reason: str) -> "Baseline":
+        entries = [{"fingerprint": f.fingerprint, "reason": reason,
+                    "rule": f.rule, "path": f.path}
+                   for f in findings]
+        # dedupe identical fingerprints (e.g. one drift reported per
+        # surface) while keeping deterministic order
+        uniq: Dict[str, dict] = {}
+        for e in entries:
+            uniq.setdefault(e["fingerprint"], e)
+        return cls(sorted(uniq.values(), key=lambda e: e["fingerprint"]))
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+def render_human(new: Sequence[Finding], baselined: Sequence[Finding],
+                 stale: Sequence[dict]) -> str:
+    out = []
+    for f in new:
+        out.append(f.render())
+    for e in stale:
+        out.append(f"baseline: stale entry {e['fingerprint']!r} "
+                   f"matches no current finding — delete it "
+                   f"(reason was: {e['reason']})")
+    if not out:
+        n = len(baselined)
+        out.append("repolint: clean"
+                   + (f" ({n} baselined finding{'s' * (n != 1)})"
+                      if n else ""))
+    return "\n".join(out)
+
+
+def render_json(new: Sequence[Finding], baselined: Sequence[Finding],
+                stale: Sequence[dict],
+                passes: Sequence[LintPass]) -> dict:
+    return {
+        "version": 1,
+        "findings": [f.to_json() for f in new],
+        "baselined": [f.to_json() for f in baselined],
+        "stale_baseline": list(stale),
+        "rules": {code: desc for p in passes
+                  for code, desc in sorted(p.rules.items())},
+        "counts": {"new": len(new), "baselined": len(baselined),
+                   "stale_baseline": len(stale)},
+    }

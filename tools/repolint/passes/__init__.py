@@ -1,0 +1,28 @@
+"""Pass registry. ``all_passes()`` returns one instance of every
+registered pass, in deterministic order. Adding a pass = writing a
+``LintPass`` subclass and listing it here (see docs/ANALYSIS.md)."""
+from __future__ import annotations
+
+from typing import List
+
+from tools.repolint.core import LintPass
+from tools.repolint.passes.config_surface import ConfigSurfacePass
+from tools.repolint.passes.doc_links import DocLinksPass
+from tools.repolint.passes.donation import DonationPass
+from tools.repolint.passes.pallas import PallasPass
+from tools.repolint.passes.rng import RngPass
+from tools.repolint.passes.tracing import TracingPass
+
+_REGISTRY = [RngPass, DonationPass, TracingPass, PallasPass,
+             ConfigSurfacePass, DocLinksPass]
+
+# framework-level rules that belong to no pass but must be documented
+# and selectable like any other
+FRAMEWORK_RULES = {
+    "SUP001": "suppression comment matches no finding",
+    "PARSE": "file failed to parse",
+}
+
+
+def all_passes() -> List[LintPass]:
+    return [cls() for cls in _REGISTRY]

@@ -1,0 +1,319 @@
+"""Config-surface drift (rules CFG001–CFG007).
+
+The ``REPRO_*`` environment surface is the contract between four
+artifacts that have no compiler keeping them honest: the engine's
+``_ENV_FIELDS`` table + default factories, the README env table, the CI
+workflow lanes that pin vars, and ``launch/serve.py``'s flag help. The
+identity-pin lanes in CI only mean something if every toggle they flip
+is real, documented, and exercised by at least one test. This pass
+cross-checks all of them:
+
+* **CFG001** — a ``REPRO_*`` var is read in code but missing from the
+  README env table (undocumented knob).
+* **CFG002** — a README env-table row names a var no code reads (stale
+  doc row).
+* **CFG003** — ``_ENV_FIELDS`` names a field ``EngineConfig`` doesn't
+  have, or its floor disagrees with the README row's ``int >= N``.
+* **CFG004** — CI sets a ``REPRO_*`` var no code reads (dead lane
+  plumbing).
+* **CFG005** — ``launch/serve.py`` help text mentions a ``REPRO_*``
+  var no code reads.
+* **CFG006** — a boolean/enum engine flag (the identity-pin toggles)
+  is referenced by no test file: the lane could silently stop testing
+  what it claims.
+* **CFG007** — fp8 KV-dtype bench-gate status drift: while ``fp8`` is
+  in ``KV_DTYPES``, both ``docs/SUPPORT_MATRIX.md`` and
+  ``docs/BENCHMARKS.md`` must mark its bench-gate status
+  *informational* (token identity is exact; the logit-MAE gate is
+  advisory), and they must say the same thing.
+
+File locations come from ``ctx.surface`` when set (tests point it at
+fixture trees) and default to the real repo layout.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from tools.repolint.core import Context, Finding, LintPass
+
+_DEFAULT_SURFACE = {
+    "engine": "src/repro/serving/engine.py",
+    "readme": "README.md",
+    "ci": ".github/workflows/ci.yml",
+    "serve": "src/repro/launch/serve.py",
+    "tests_dir": "tests",
+    "src_dirs": ["src", "benchmarks"],
+    "kv_quant": "src/repro/models/kv_quant.py",
+    "docs_support": "docs/SUPPORT_MATRIX.md",
+    "docs_benchmarks": "docs/BENCHMARKS.md",
+}
+
+_ENV_VAR_RE = re.compile(r"REPRO_[A-Z][A-Z0-9_]*")
+_ENV_READ_RE = re.compile(
+    r"environ(?:\.get)?\s*[\(\[]\s*[\"'](REPRO_[A-Z][A-Z0-9_]*)[\"']")
+# the values column may contain escaped pipes (`f32` \| `bf16`), so it
+# captures to end-of-line and strips the closing bar itself
+_README_ROW_RE = re.compile(r"^\|\s*`(REPRO_[A-Z][A-Z0-9_]*)`\s*\|"
+                            r"([^|]*)\|\s*(.*?)\s*\|?\s*$")
+_FLOOR_RE = re.compile(r"int\s*>=\s*(\d+)")
+_SETS_FIELD_RE = re.compile(r"EngineConfig\.([a-z_]+)")
+
+
+def _read(root: str, rel: Optional[str]) -> Optional[str]:
+    if not rel:
+        return None
+    path = os.path.join(root, rel)
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as fh:
+        return fh.read()
+
+
+def _first_line_of(text: str, needle: str) -> int:
+    for i, line in enumerate(text.splitlines(), start=1):
+        if needle in line:
+            return i
+    return 1
+
+
+def _code_env_reads(root: str, src_dirs: List[str]
+                    ) -> Dict[str, Tuple[str, int]]:
+    """env var -> (repo-relative file, line) of its first read."""
+    reads: Dict[str, Tuple[str, int]] = {}
+    for d in src_dirs:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(x for x in dirnames
+                                 if x != "__pycache__"
+                                 and not x.startswith("."))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn),
+                                      root).replace(os.sep, "/")
+                text = _read(root, rel) or ""
+                for i, line in enumerate(text.splitlines(), start=1):
+                    for m in _ENV_READ_RE.finditer(line):
+                        reads.setdefault(m.group(1), (rel, i))
+    return reads
+
+
+def _readme_rows(text: str) -> Dict[str, Tuple[int, str, str]]:
+    """env var -> (line, sets-column, values-column)."""
+    rows: Dict[str, Tuple[int, str, str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _README_ROW_RE.match(line.strip())
+        if m:
+            rows[m.group(1)] = (i, m.group(2).strip(), m.group(3).strip())
+    return rows
+
+
+def _engine_model(text: str) -> Tuple[Dict[str, str],
+                                      Dict[str, Tuple[str, Optional[int],
+                                                      int]]]:
+    """(EngineConfig field -> annotation source,
+    _ENV_FIELDS env var -> (field, floor, line))."""
+    fields: Dict[str, str] = {}
+    env_fields: Dict[str, Tuple[str, Optional[int], int]] = {}
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return fields, env_fields
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef)
+                and node.name == "EngineConfig"):
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                try:
+                    ann = ast.unparse(stmt.annotation)
+                except Exception:
+                    ann = ""
+                fields[stmt.target.id] = ann
+            elif isinstance(stmt, ast.Assign) \
+                    and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and stmt.targets[0].id == "_ENV_FIELDS" \
+                    and isinstance(stmt.value, ast.Dict):
+                for k, v in zip(stmt.value.keys, stmt.value.values):
+                    if not (isinstance(k, ast.Constant)
+                            and isinstance(v, ast.Tuple)
+                            and len(v.elts) >= 1):
+                        continue
+                    fname = (v.elts[0].value
+                             if isinstance(v.elts[0], ast.Constant)
+                             else None)
+                    floor = (v.elts[2].value
+                             if len(v.elts) > 2
+                             and isinstance(v.elts[2], ast.Constant)
+                             and isinstance(v.elts[2].value, int)
+                             else None)
+                    if fname:
+                        env_fields[k.value] = (fname, floor, k.lineno)
+    return fields, env_fields
+
+
+def _tests_text(root: str, tests_dir: str) -> str:
+    chunks: List[str] = []
+    base = os.path.join(root, tests_dir)
+    if not os.path.isdir(base):
+        return ""
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = sorted(x for x in dirnames if x != "__pycache__"
+                             and not x.startswith("."))
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                chunks.append(_read(
+                    root, os.path.relpath(os.path.join(dirpath, fn),
+                                          root)) or "")
+    return "\n".join(chunks)
+
+
+class ConfigSurfacePass(LintPass):
+    name = "config-surface"
+    rules = {
+        "CFG001": "env var read in code but missing from README table",
+        "CFG002": "README env-table row names a var no code reads",
+        "CFG003": "_ENV_FIELDS entry disagrees with EngineConfig/README",
+        "CFG004": "CI sets an env var no code reads",
+        "CFG005": "serve.py help mentions an env var no code reads",
+        "CFG006": "engine flag referenced by no test",
+        "CFG007": "fp8 bench-gate status drifts between docs",
+    }
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        s = dict(_DEFAULT_SURFACE)
+        s.update(ctx.surface or {})
+        root = ctx.root
+
+        reads = _code_env_reads(root, s["src_dirs"])
+        readme_text = _read(root, s["readme"])
+        readme = _readme_rows(readme_text) if readme_text else {}
+        engine_text = _read(root, s["engine"])
+        fields, env_fields = (_engine_model(engine_text)
+                              if engine_text else ({}, {}))
+        # _ENV_FIELDS entries are read dynamically (from_env loops over
+        # the table), invisible to the literal-read scan — count them
+        for var, (_fname, _floor, line) in env_fields.items():
+            reads.setdefault(var, (s["engine"], line))
+
+        # CFG001 / CFG002: code reads <-> README rows
+        if readme_text is not None:
+            for var, (rel, line) in sorted(reads.items()):
+                if var not in readme:
+                    yield Finding(
+                        "CFG001", rel, line,
+                        f"{var} is read here but has no row in the "
+                        f"README env table — document the knob",
+                        detail=var)
+            for var, (line, _sets, _vals) in sorted(readme.items()):
+                if var not in reads:
+                    yield Finding(
+                        "CFG002", s["readme"], line,
+                        f"README documents {var} but no code under "
+                        f"{'/'.join(s['src_dirs'])} reads it — stale "
+                        f"row (or the read moved out of the scanned "
+                        f"tree)", detail=var)
+
+        # CFG003: _ENV_FIELDS vs EngineConfig fields vs README floors
+        for var, (fname, floor, line) in sorted(env_fields.items()):
+            if fields and fname not in fields:
+                yield Finding(
+                    "CFG003", s["engine"], line,
+                    f"_ENV_FIELDS maps {var} to EngineConfig."
+                    f"{fname}, which is not a field",
+                    detail=f"{var}:field")
+            row = readme.get(var)
+            if row and floor is not None:
+                m = _FLOOR_RE.search(row[2])
+                if m and int(m.group(1)) != floor:
+                    yield Finding(
+                        "CFG003", s["readme"], row[0],
+                        f"README says {var} floor is int >= "
+                        f"{m.group(1)} but _ENV_FIELDS enforces >= "
+                        f"{floor}", detail=f"{var}:floor")
+
+        # CFG004: CI-pinned vars must be read somewhere
+        ci_text = _read(root, s["ci"])
+        if ci_text is not None:
+            seen = set()
+            for i, line in enumerate(ci_text.splitlines(), start=1):
+                for m in _ENV_VAR_RE.finditer(line):
+                    var = m.group(0)
+                    if var in seen:
+                        continue
+                    seen.add(var)
+                    if var not in reads:
+                        yield Finding(
+                            "CFG004", s["ci"], i,
+                            f"CI sets {var} but no code reads it — "
+                            f"the lane pins nothing", detail=var)
+
+        # CFG005: serve.py help text mentions only real vars
+        serve_text = _read(root, s["serve"])
+        if serve_text is not None:
+            seen = set()
+            for i, line in enumerate(serve_text.splitlines(), start=1):
+                for m in _ENV_VAR_RE.finditer(line):
+                    var = m.group(0)
+                    if var in seen:
+                        continue
+                    seen.add(var)
+                    if var not in reads:
+                        yield Finding(
+                            "CFG005", s["serve"], i,
+                            f"serve.py mentions {var} but no code "
+                            f"reads it — stale help text", detail=var)
+
+        # CFG006: every boolean/enum engine flag is pinned by >= 1 test
+        if fields:
+            tests = _tests_text(root, s["tests_dir"])
+            enum_fields = set()
+            for var, (line, sets_col, vals_col) in readme.items():
+                if "|" in vals_col:
+                    fm = _SETS_FIELD_RE.search(sets_col)
+                    if fm:
+                        enum_fields.add(fm.group(1))
+            for fname, ann in sorted(fields.items()):
+                if "bool" not in ann and fname not in enum_fields:
+                    continue
+                if not re.search(rf"\b{re.escape(fname)}\b", tests):
+                    yield Finding(
+                        "CFG006", s["engine"],
+                        _first_line_of(engine_text or "",
+                                       f"{fname}:"),
+                        f"engine flag {fname!r} is referenced by no "
+                        f"test under {s['tests_dir']}/ — its identity "
+                        f"pin is unguarded", detail=fname)
+
+        # CFG007: fp8 bench-gate status must agree across docs
+        kv_text = _read(root, s["kv_quant"])
+        if kv_text and re.search(r"KV_DTYPES\s*=.*fp8", kv_text):
+            for key in ("docs_support", "docs_benchmarks"):
+                doc = _read(root, s[key])
+                if doc is None:
+                    continue
+                # prose wraps: accept "informational" within two lines
+                # of an fp8 mention
+                lines = doc.splitlines()
+                ok = any(
+                    "fp8" in ln and any(
+                        "informational" in lines[j].lower()
+                        for j in range(max(0, i - 2),
+                                       min(len(lines), i + 3)))
+                    for i, ln in enumerate(lines))
+                if not ok:
+                    yield Finding(
+                        "CFG007", s[key],
+                        _first_line_of(doc, "fp8"),
+                        "fp8 is a supported KV dtype but this doc "
+                        "does not mark its bench-gate status as "
+                        "informational — token identity is exact, "
+                        "the logit-MAE gate is advisory; docs must "
+                        "agree", detail="fp8-status")

@@ -1,0 +1,110 @@
+"""Doc-link integrity (rule DOC001) — the former standalone
+``tools/check_doc_links.py``, folded into the framework so docs and
+code drift are reported through one CLI / one CI step.
+
+Every repo-relative path referenced from the markdown docs must exist:
+
+* markdown links ``[text](target)`` with non-URL targets (resolved
+  relative to the doc's directory);
+* backticked repo paths like ``docs/ENGINE.md``, ``benchmarks/foo.py``
+  or ``tests/test_x.py::test_y`` (the ``::test`` suffix and brace
+  expansions like ``serving/{engine,queue}.py`` are resolved; ``*``
+  glob mentions are skipped; bare module mentions get a ``.py``
+  fallback).
+
+Anchors (``#section``) and external URLs are not validated. The doc
+set is README.md, ROADMAP.md and every ``docs/*.md``, overridable via
+``ctx.surface["doc_files"]``.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import re
+from typing import Iterable, List
+
+from tools.repolint.core import Context, Finding, LintPass
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
+# backticked tokens that look like repo paths: start with a known
+# top-level dir and contain a slash or end in a known file extension
+_TICKED = re.compile(r"`([A-Za-z0-9_./{},:*-]+)`")
+_TOP_DIRS = ("src/", "tests/", "benchmarks/", "docs/", "tools/",
+             "examples/", ".github/")
+_TOP_FILES = ("README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+              "CHANGES.md", "pyproject.toml")
+
+
+def _expand_braces(path: str) -> List[str]:
+    m = re.search(r"\{([^}]*)\}", path)
+    if not m:
+        return [path]
+    pre, post = path[: m.start()], path[m.end():]
+    return list(itertools.chain.from_iterable(
+        _expand_braces(pre + alt + post)
+        for alt in m.group(1).split(",")))
+
+
+def _candidates(token: str) -> List[str]:
+    """Paths a backticked token implies, or [] if it isn't a path."""
+    token = token.split("::")[0]  # pytest node ids
+    if token in _TOP_FILES:
+        return [token]
+    if not token.startswith(_TOP_DIRS):
+        return []
+    if "*" in token:
+        return []  # glob-style mentions (BENCH_*.json) aren't paths
+    return _expand_braces(token)
+
+
+def _exists(root: str, rel: str) -> bool:
+    p = os.path.join(root, rel)
+    return os.path.exists(p) or os.path.exists(p + ".py")
+
+
+def doc_files(root: str) -> List[str]:
+    docs_dir = os.path.join(root, "docs")
+    extra = []
+    if os.path.isdir(docs_dir):
+        extra = [f"docs/{f}" for f in sorted(os.listdir(docs_dir))
+                 if f.endswith(".md")]
+    return [d for d in ["README.md", "ROADMAP.md", *extra]
+            if os.path.isfile(os.path.join(root, d))]
+
+
+def broken_references(root: str, docs: List[str]
+                      ) -> List[Finding]:
+    findings: List[Finding] = []
+    for doc in docs:
+        with open(os.path.join(root, doc), encoding="utf-8") as fh:
+            text = fh.read()
+        # reference -> first line it appears on
+        refs = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            for m in _MD_LINK.finditer(line):
+                target = m.group(1).strip()
+                if "://" in target or target.startswith("mailto:"):
+                    continue
+                # md links resolve relative to the doc's directory
+                base = os.path.dirname(doc)
+                rel = os.path.normpath(os.path.join(base, target))
+                refs.setdefault(rel.replace(os.sep, "/"), i)
+            for m in _TICKED.finditer(line):
+                for rel in _candidates(m.group(1)):
+                    refs.setdefault(rel, i)
+        for rel in sorted(refs):
+            if not _exists(root, rel):
+                findings.append(Finding(
+                    "DOC001", doc, refs[rel],
+                    f"broken reference -> {rel}", detail=rel))
+    return findings
+
+
+class DocLinksPass(LintPass):
+    name = "doc-links"
+    rules = {"DOC001": "doc references a repo path that does not exist"}
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        surface = ctx.surface or {}
+        docs = surface.get("doc_files") or doc_files(ctx.root)
+        yield from broken_references(ctx.root, docs)

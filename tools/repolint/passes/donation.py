@@ -1,0 +1,191 @@
+"""Donation safety (rule DON001).
+
+``jax.jit(donate_argnums=...)`` hands the argument's device buffer to
+the compiled computation — the engine's decode/prefill/COW steps all
+donate the paged KV pools so XLA can update them in place. After the
+call, the donated buffer is DELETED: a host read returns garbage or
+raises, and (worse) a second device use aliases memory the step is
+concurrently overwriting. This is exactly the bug class the
+fault-recovery path's emergency drain exists to contain; the lint
+catches it before it ships.
+
+The pass resolves donating callables **repo-wide** in two steps:
+
+1. collect every function whose definition declares a literal
+   ``donate_argnums``: ``@jax.jit(...)`` / ``@partial(jax.jit, ...)``
+   decorators, ``name = jax.jit(fn, donate_argnums=...)`` assignments,
+   and attribute bindings (``self._copy_block = jax.jit(...)`` or
+   ``self._write_kv = write_kv`` forwarding a known donating local);
+2. at every call site matching a collected name (bare or as the final
+   attribute, so ``eng._copy_block(...)`` matches), the arguments in
+   donated positions are *dead* after the statement — unless the same
+   statement rebinds them (``cache = step(cache, ...)``, the blessed
+   swap idiom). Any later read of a dead name before a rebinding is
+   **DON001**.
+
+Matching is by name, statement-granular and intraprocedural — a
+heuristic, not a proof; findings that are deliberate go in the baseline
+with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.repolint import astutil
+from tools.repolint.core import Context, Finding, LintPass, PyFile
+
+
+def _donate_positions(call: ast.Call,
+                      imports: Dict[str, str]) -> Optional[Tuple[int, ...]]:
+    """Literal ``donate_argnums`` of a ``jax.jit`` call, else None."""
+    path = astutil.resolve(call.func, imports)
+    if path not in ("jax.jit", "jax.api.jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for elt in v.elts:
+                    if not (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, int)):
+                        return None
+                    out.append(elt.value)
+                return tuple(out)
+            return None
+    return None
+
+
+def _jit_call_in(node: ast.AST, imports: Dict[str, str]
+                 ) -> Optional[Tuple[int, ...]]:
+    """donate_argnums found on ``jax.jit(...)`` or
+    ``[functools.]partial(jax.jit, ...)`` expressions."""
+    if not isinstance(node, ast.Call):
+        return None
+    pos = _donate_positions(node, imports)
+    if pos is not None:
+        return pos
+    path = astutil.resolve(node.func, imports)
+    if path in ("functools.partial", "partial") and node.args:
+        inner = astutil.resolve(node.args[0], imports)
+        if inner in ("jax.jit", "jax.api.jit"):
+            for kw in node.keywords:
+                if kw.arg == "donate_argnums":
+                    fake = ast.Call(func=node.args[0], args=[],
+                                    keywords=[kw])
+                    return _donate_positions(fake, imports)
+    return None
+
+
+def collect_donating(py_files: List[PyFile]) -> Dict[str, Tuple[int, ...]]:
+    """Map callable name (bare or attribute tail) -> donated positions,
+    across the whole analyzed file set."""
+    donating: Dict[str, Set[int]] = {}
+
+    def note(name: str, pos: Tuple[int, ...]) -> None:
+        donating.setdefault(name, set()).update(pos)
+
+    for pf in py_files:
+        imports = astutil.import_map(pf.tree)
+        local_defs: Dict[str, Tuple[int, ...]] = {}
+        # decorated defs
+        for fn in astutil.functions(pf.tree):
+            for dec in fn.decorator_list:
+                pos = _jit_call_in(dec, imports)
+                if pos is not None:
+                    note(fn.name, pos)
+                    local_defs[fn.name] = pos
+        # name/attr = jax.jit(..., donate_argnums=...) and forwarding
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            target = node.targets[0]
+            tail = None
+            if isinstance(target, ast.Name):
+                tail = target.id
+            elif isinstance(target, ast.Attribute):
+                tail = target.attr
+            if tail is None:
+                continue
+            pos = _jit_call_in(node.value, imports)
+            if pos is not None:
+                note(tail, pos)
+                local_defs[tail] = pos
+            elif isinstance(node.value, ast.Name) \
+                    and node.value.id in local_defs:
+                # self._write_kv = write_kv (a decorated local)
+                note(tail, local_defs[node.value.id])
+    return {k: tuple(sorted(v)) for k, v in donating.items()}
+
+
+def _call_tail(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+class DonationPass(LintPass):
+    name = "donation"
+    rules = {
+        "DON001": "buffer read after being donated to a jitted call",
+    }
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        donating = collect_donating(ctx.py_files)
+        if not donating:
+            return
+        for pf in ctx.py_files:
+            for fn in astutil.functions(pf.tree):
+                yield from self._check_fn(pf, fn, donating)
+
+    def _check_fn(self, pf: PyFile, fn: astutil.FunctionNode,
+                  donating: Dict[str, Tuple[int, ...]]
+                  ) -> Iterable[Finding]:
+        # dead id -> (donated-to name, line)
+        dead: Dict[str, Tuple[str, int]] = {}
+        for stmt in astutil.body_statements(fn):
+            if isinstance(stmt, astutil.SCOPE_NODES):
+                continue
+            # 1) reads of currently-dead ids (loads evaluated by this
+            #    statement, including chains rooted at a dead id)
+            if dead:
+                for load in astutil.stmt_loads(stmt):
+                    lid = astutil.expr_id(load)
+                    if lid is None:
+                        continue
+                    for did, (fname, dline) in dead.items():
+                        if lid == did or lid.startswith((did + ".",
+                                                         did + "[")):
+                            yield Finding(
+                                "DON001", pf.path, load.lineno,
+                                f"{did!r} was donated to {fname!r} at "
+                                f"line {dline} and must not be read "
+                                f"afterwards (the device buffer is "
+                                f"deleted); rebind it from the call's "
+                                f"result instead", detail=did)
+                            dead.pop(did, None)
+                            break
+            # 2) new donations by this statement
+            newly_dead: List[Tuple[str, str, int]] = []
+            for call in astutil.stmt_calls(stmt):
+                tail = _call_tail(call)
+                if tail not in donating:
+                    continue
+                for p in donating[tail]:
+                    if p < len(call.args):
+                        aid = astutil.expr_id(call.args[p])
+                        if aid is not None:
+                            newly_dead.append((aid, tail, call.lineno))
+            # 3) rebindings by this statement resurrect ids (the
+            #    cache-swap idiom rebinds in the same statement)
+            stored = set(astutil.stmt_targets(stmt))
+            for sid in stored:
+                dead.pop(sid, None)
+            for aid, tail, line in newly_dead:
+                if aid not in stored:
+                    dead[aid] = (tail, line)

@@ -1,0 +1,284 @@
+"""Pallas kernel lint (rules PLK001/PLK002/PLK003).
+
+The TPU Pallas kernels are the highest-blast-radius code in the repo:
+a BlockSpec whose index_map arity or return rank disagrees with the
+grid compiles into silently-wrong slab addressing, a Python loop over a
+traced dimension unrolls into megabytes of HLO, and a scratch
+allocation that overflows VMEM (~16 MB/core) fails only on real
+hardware — which CI doesn't have. All three are statically visible.
+
+* **PLK001** — grid/BlockSpec disagreement: an ``index_map`` lambda
+  whose positional-arg count can't absorb the grid (named args must be
+  the grid rank, or grid rank + ``num_scalar_prefetch`` when a
+  ``PrefetchScalarGridSpec`` passes the prefetch refs along — a
+  trailing ``*_`` vararg absorbs those too), or an index_map returning
+  a tuple whose length differs from the ``block_shape`` rank.
+* **PLK002** — a Python ``for``/``while`` in the kernel body whose
+  bound reads a kernel ref (``for i in range(lens_ref[0])``): traced at
+  kernel build, this unrolls or fails; use ``lax.fori_loop``.
+* **PLK003** — static VMEM scratch estimate over budget: when every
+  ``pltpu.VMEM(shape, dtype)`` dim folds to a literal (module
+  constants included), the summed bytes must fit
+  ``options["vmem_budget"]`` (default 16 MiB). Unresolvable dims are
+  skipped — the rule under-reports rather than guesses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from tools.repolint import astutil
+from tools.repolint.core import Context, Finding, LintPass, PyFile
+
+_PALLAS_CALL = ("jax.experimental.pallas.pallas_call", "pl.pallas_call")
+_GRID_SPECS = ("jax.experimental.pallas.tpu.PrefetchScalarGridSpec",
+               "pltpu.PrefetchScalarGridSpec",
+               "jax.experimental.pallas.GridSpec", "pl.GridSpec")
+_VMEM = ("jax.experimental.pallas.tpu.VMEM", "pltpu.VMEM")
+_BLOCKSPEC = ("jax.experimental.pallas.BlockSpec", "pl.BlockSpec")
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+    "bool_": 1, "float64": 8, "int64": 8,
+}
+_DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _tuple_elts(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def _name_assignment(tree: ast.AST, name: str) -> Optional[ast.AST]:
+    """Last ``name = <expr>`` assignment in the file (linear scan is
+    fine at lint granularity)."""
+    found = None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name:
+            found = node.value
+    return found
+
+
+class _CallSite:
+    """One pallas_call with its resolved grid/specs."""
+
+    def __init__(self) -> None:
+        self.call: Optional[ast.Call] = None
+        self.grid_rank: Optional[int] = None
+        self.grid_dims: List[Optional[int]] = []
+        self.num_prefetch: int = 0
+        self.block_specs: List[ast.AST] = []
+        self.scratch_shapes: List[ast.AST] = []
+        self.kernel_name: Optional[str] = None
+
+
+def _resolve_site(pf: PyFile, imports: Dict[str, str], call: ast.Call,
+                  env: Dict[str, int]) -> _CallSite:
+    site = _CallSite()
+    site.call = call
+
+    # kernel: first positional arg, unwrapped through functools.partial
+    if call.args:
+        k = call.args[0]
+        if isinstance(k, ast.Call):
+            p = astutil.resolve(k.func, imports)
+            if p in ("functools.partial", "partial") and k.args \
+                    and isinstance(k.args[0], ast.Name):
+                site.kernel_name = k.args[0].id
+        elif isinstance(k, ast.Name):
+            site.kernel_name = k.id
+        elif isinstance(k, ast.Attribute):
+            site.kernel_name = k.attr
+
+    def absorb_specs(container: Optional[ast.AST]) -> None:
+        elts = _tuple_elts(container)
+        if elts is None and container is not None:
+            elts = [container]
+        for e in elts or []:
+            site.block_specs.append(e)
+
+    grid = _kw(call, "grid")
+    spec = _kw(call, "grid_spec")
+    if spec is not None:
+        if isinstance(spec, ast.Name):
+            spec = _name_assignment(pf.tree, spec.id)
+        if isinstance(spec, ast.Call) \
+                and astutil.resolve(spec.func, imports) in _GRID_SPECS:
+            grid = _kw(spec, "grid")
+            npf = _kw(spec, "num_scalar_prefetch")
+            v = astutil.const_int(npf, env) if npf is not None else None
+            site.num_prefetch = v if v is not None else 0
+            absorb_specs(_kw(spec, "in_specs"))
+            absorb_specs(_kw(spec, "out_specs"))
+            site.scratch_shapes.extend(
+                _tuple_elts(_kw(spec, "scratch_shapes")) or [])
+    else:
+        absorb_specs(_kw(call, "in_specs"))
+        absorb_specs(_kw(call, "out_specs"))
+        site.scratch_shapes.extend(
+            _tuple_elts(_kw(call, "scratch_shapes")) or [])
+
+    dims = _tuple_elts(grid)
+    if dims is None and grid is not None:
+        dims = [grid]  # grid=(n,) written as grid=n
+    if dims is not None:
+        site.grid_rank = len(dims)
+        site.grid_dims = [astutil.const_int(d, env) for d in dims]
+    return site
+
+
+def _lambda_arity(lam: ast.Lambda) -> Tuple[int, bool]:
+    """(named positional count, has-vararg)."""
+    a = lam.args
+    return len(a.args) + len(a.posonlyargs), a.vararg is not None
+
+
+class PallasPass(LintPass):
+    name = "pallas"
+    rules = {
+        "PLK001": "grid / BlockSpec rank disagreement",
+        "PLK002": "Python loop over a traced dimension in a kernel body",
+        "PLK003": "static VMEM scratch estimate exceeds budget",
+    }
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        budget = ctx.options.get("vmem_budget", _DEFAULT_VMEM_BUDGET)
+        for pf in ctx.py_files:
+            imports = astutil.import_map(pf.tree)
+            if not any(v.startswith("jax") for v in imports.values()):
+                continue
+            env = astutil.const_env(pf.tree)
+            kernels_used: Dict[str, _CallSite] = {}
+            for node in ast.walk(pf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if astutil.resolve(node.func, imports) not in _PALLAS_CALL:
+                    continue
+                site = _resolve_site(pf, imports, node, env)
+                yield from self._check_specs(pf, imports, site, env)
+                yield from self._check_vmem(pf, imports, site, env,
+                                            budget)
+                if site.kernel_name:
+                    kernels_used[site.kernel_name] = site
+            if kernels_used:
+                for fn in astutil.functions(pf.tree):
+                    if fn.name in kernels_used:
+                        yield from self._check_kernel_body(pf, fn)
+
+    # -- PLK001 -----------------------------------------------------------
+    def _check_specs(self, pf: PyFile, imports: Dict[str, str],
+                     site: _CallSite, env: Dict[str, int]
+                     ) -> Iterable[Finding]:
+        if site.grid_rank is None:
+            return
+        rank, npf = site.grid_rank, site.num_prefetch
+        for spec in site.block_specs:
+            if not (isinstance(spec, ast.Call) and astutil.resolve(
+                    spec.func, imports) in _BLOCKSPEC):
+                continue
+            if not spec.args and _kw(spec, "memory_space") is not None:
+                continue  # whole-ref spec: no block shape to check
+            shape = spec.args[0] if spec.args else _kw(spec, "block_shape")
+            index_map = spec.args[1] if len(spec.args) > 1 \
+                else _kw(spec, "index_map")
+            shape_elts = _tuple_elts(shape)
+            if isinstance(index_map, ast.Lambda):
+                named, vararg = _lambda_arity(index_map)
+                ok = named == rank or named == rank + npf \
+                    or (vararg and named <= rank + npf)
+                if not ok:
+                    yield Finding(
+                        "PLK001", pf.path, index_map.lineno,
+                        f"index_map takes {named} positional args but "
+                        f"the grid has rank {rank}"
+                        + (f" (+{npf} scalar-prefetch refs)" if npf
+                           else "")
+                        + "; each grid axis feeds one index_map arg",
+                        detail=f"arity@{site.kernel_name or '?'}:"
+                               f"{index_map.lineno}")
+                ret = index_map.body
+                ret_elts = _tuple_elts(ret)
+                if ret_elts is not None and shape_elts is not None \
+                        and len(ret_elts) != len(shape_elts):
+                    yield Finding(
+                        "PLK001", pf.path, index_map.lineno,
+                        f"index_map returns {len(ret_elts)} indices "
+                        f"but block_shape has rank {len(shape_elts)}",
+                        detail=f"rank@{site.kernel_name or '?'}:"
+                               f"{index_map.lineno}")
+
+    # -- PLK002 -----------------------------------------------------------
+    def _check_kernel_body(self, pf: PyFile, fn: astutil.FunctionNode
+                           ) -> Iterable[Finding]:
+        ref_params = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+        for stmt in astutil.body_statements(fn):
+            bound = None
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                bound = stmt.iter
+            elif isinstance(stmt, ast.While):
+                bound = stmt.test
+            if bound is None:
+                continue
+            for sub in ast.walk(bound):
+                if isinstance(sub, ast.Subscript) \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id in ref_params:
+                    yield Finding(
+                        "PLK002", pf.path, stmt.lineno,
+                        f"Python loop bound reads kernel ref "
+                        f"{sub.value.id!r} in {fn.name!r} — traced "
+                        f"values can't drive Python loops; use "
+                        f"lax.fori_loop / jnp.where masking",
+                        detail=f"{fn.name}:{sub.value.id}")
+                    break
+
+    # -- PLK003 -----------------------------------------------------------
+    def _check_vmem(self, pf: PyFile, imports: Dict[str, str],
+                    site: _CallSite, env: Dict[str, int],
+                    budget: int) -> Iterable[Finding]:
+        total = 0
+        resolved_any = False
+        for scratch in site.scratch_shapes:
+            if not (isinstance(scratch, ast.Call) and astutil.resolve(
+                    scratch.func, imports) in _VMEM):
+                continue
+            shape = scratch.args[0] if scratch.args else None
+            dims = _tuple_elts(shape)
+            if dims is None:
+                continue
+            size = 1
+            ok = True
+            for d in dims:
+                v = astutil.const_int(d, env)
+                if v is None:
+                    ok = False
+                    break
+                size *= v
+            if not ok:
+                continue
+            dtype_name = None
+            if len(scratch.args) > 1:
+                dt = astutil.resolve(scratch.args[1], imports)
+                if dt:
+                    dtype_name = dt.split(".")[-1]
+            nbytes = size * _DTYPE_BYTES.get(dtype_name or "float32", 4)
+            total += nbytes
+            resolved_any = True
+        if resolved_any and total > budget:
+            yield Finding(
+                "PLK003", pf.path, site.call.lineno,
+                f"VMEM scratch estimate {total} bytes exceeds the "
+                f"{budget}-byte budget for this pallas_call; shrink "
+                f"block shapes or spill to ANY/HBM",
+                detail=f"vmem@{site.kernel_name or '?'}")

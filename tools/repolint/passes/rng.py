@@ -1,0 +1,219 @@
+"""RNG key discipline (rules RNG001/RNG002).
+
+The engine's bit-identity pins (sharded == single-device, horizon K ==
+1, kernel == dense) assume the PRNG key stream is consumed in exactly
+one order: every ``jax.random`` sampler eats a key derived by ``split``
+/ ``fold_in``, and no key value is consumed twice. A reused key silently
+correlates samples — the traces still *look* random, but the identity
+contracts (and the paper's reproducible pruning decisions) are gone.
+
+* **RNG001** — a sampler consumes a raw ``PRNGKey(...)`` result
+  (inline, or a variable bound from ``PRNGKey`` with no intervening
+  ``split``). Raw seeds are for deriving streams, not for sampling.
+* **RNG002** — the same key value is consumed twice: two samplers (or
+  ``split`` calls) eat one key variable without a rebinding in between,
+  or a key bound outside a loop is consumed inside it without being
+  rebound each iteration.
+
+``fold_in(key, data)`` is exempt from double-consumption: deriving many
+streams from one key with varying ``data`` is the blessed pattern (the
+engine does exactly this per decode iteration).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.repolint import astutil
+from tools.repolint.core import Context, Finding, LintPass, PyFile
+
+# jax.random attributes that derive/construct rather than consume
+_CREATORS = {"PRNGKey", "key"}
+_DERIVERS = {"split", "clone"}
+_EXEMPT = {"fold_in", "key_data", "wrap_key_data", "key_impl",
+           "bits"} | _CREATORS
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While)
+
+
+def _random_fn(call: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    """The ``jax.random`` function name for this call, else None."""
+    path = astutil.resolve(call.func, imports)
+    if path and path.startswith("jax.random."):
+        return path.split(".")[-1]
+    return None
+
+
+@dataclasses.dataclass
+class _KeyState:
+    origin: str = "unknown"          # "prngkey" | "derived" | "unknown"
+    consumed_at: List[int] = dataclasses.field(default_factory=list)
+
+
+class _FnAnalyzer:
+    def __init__(self, pf: PyFile, imports: Dict[str, str]):
+        self.pf = pf
+        self.imports = imports
+        self.state: Dict[str, _KeyState] = {}
+        self.findings: List[Finding] = []
+        # stack of (stored-ids, consumed-ids) for enclosing loops
+        self.loop_stack: List[Dict[str, Set[str]]] = []
+
+    # -- helpers ---------------------------------------------------------
+    def _consume(self, key_id: str, line: int, fn_name: str) -> None:
+        st = self.state.setdefault(key_id, _KeyState())
+        if st.consumed_at:
+            self.findings.append(Finding(
+                "RNG002", self.pf.path, line,
+                f"key {key_id!r} consumed again by jax.random."
+                f"{fn_name} (already consumed at line "
+                f"{st.consumed_at[0]}); derive a fresh key with "
+                f"split/fold_in", detail=key_id))
+        st.consumed_at.append(line)
+        for frame in self.loop_stack:
+            frame["consumed"].add(key_id)
+
+    def _store(self, key_id: str, origin: str) -> None:
+        self.state[key_id] = _KeyState(origin=origin)
+        for frame in self.loop_stack:
+            frame["stored"].add(key_id)
+
+    def _rhs_origin(self, value: ast.AST) -> str:
+        if isinstance(value, ast.Call):
+            fn = _random_fn(value, self.imports)
+            if fn in _CREATORS:
+                return "prngkey"
+            if fn in _DERIVERS or fn == "fold_in":
+                return "derived"
+        return "unknown"
+
+    # -- statement processing -------------------------------------------
+    def process_calls(self, stmt: ast.stmt) -> None:
+        for call in astutil.stmt_calls(stmt):
+            fn = _random_fn(call, self.imports)
+            if fn is None or fn in _EXEMPT or not call.args:
+                continue
+            key_arg = call.args[0]
+            line = call.lineno
+            # inline raw key: jax.random.normal(jax.random.PRNGKey(0), ..)
+            if fn not in _DERIVERS and isinstance(key_arg, ast.Call) \
+                    and _random_fn(key_arg, self.imports) in _CREATORS:
+                self.findings.append(Finding(
+                    "RNG001", self.pf.path, line,
+                    f"jax.random.{fn} consumes a raw PRNGKey directly; "
+                    f"derive a per-use key with split/fold_in",
+                    detail=f"inline@{fn}"))
+                continue
+            key_id = astutil.expr_id(key_arg)
+            if key_id is None:
+                continue
+            st = self.state.get(key_id)
+            if fn not in _DERIVERS and st is not None \
+                    and st.origin == "prngkey":
+                self.findings.append(Finding(
+                    "RNG001", self.pf.path, line,
+                    f"jax.random.{fn} consumes {key_id!r}, a raw "
+                    f"PRNGKey; derive a per-use key with "
+                    f"split/fold_in", detail=key_id))
+            self._consume(key_id, line, fn)
+
+    def process_stores(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            origin = self._rhs_origin(stmt.value)
+            for tid in astutil.stmt_targets(stmt):
+                self._store(tid, origin)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            origin = "unknown"
+            if getattr(stmt, "value", None) is not None:
+                origin = self._rhs_origin(stmt.value)
+            for tid in astutil.stmt_targets(stmt):
+                self._store(tid, origin)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.With)):
+            for tid in astutil.stmt_targets(stmt):
+                self._store(tid, "unknown")
+
+    def run_block(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, astutil.SCOPE_NODES):
+                # nested scope: analyzed on its own; its decorator and
+                # default expressions do run here though
+                self.process_calls(stmt)
+                continue
+            # loads (calls) before stores: `rng, k = split(rng)` is a
+            # legal consume-then-rebind in one statement
+            self.process_calls(stmt)
+            self.process_stores(stmt)
+            if isinstance(stmt, _LOOP_NODES):
+                self._run_loop(stmt)
+            elif isinstance(stmt, ast.If):
+                self._run_branches([stmt.body, stmt.orelse])
+            elif isinstance(stmt, ast.Try):
+                blocks = [stmt.body + (stmt.orelse or [])]
+                blocks += [h.body for h in stmt.handlers]
+                if stmt.finalbody:
+                    blocks = [b + stmt.finalbody for b in blocks]
+                self._run_branches(blocks)
+            else:
+                for block in astutil._child_blocks(stmt):
+                    self.run_block(block)
+
+    def _run_branches(self, blocks: List[List[ast.stmt]]) -> None:
+        """Process exclusive branches against snapshots and merge by
+        worst case per key, so `if/else` arms each consuming a key once
+        don't add up to a false double-consumption."""
+        base = {k: dataclasses.replace(
+            v, consumed_at=list(v.consumed_at))
+            for k, v in self.state.items()}
+        merged: Dict[str, _KeyState] = {}
+        for block in blocks:
+            self.state = {k: dataclasses.replace(
+                v, consumed_at=list(v.consumed_at))
+                for k, v in base.items()}
+            self.run_block(block)
+            for k, v in self.state.items():
+                cur = merged.get(k)
+                if cur is None or len(v.consumed_at) > len(
+                        cur.consumed_at):
+                    merged[k] = v
+        self.state = merged
+
+    def _run_loop(self, stmt: ast.stmt) -> None:
+        frame: Dict[str, Set[str]] = {"stored": set(), "consumed": set()}
+        self.loop_stack.append(frame)
+        self.run_block(stmt.body)
+        self.run_block(getattr(stmt, "orelse", []) or [])
+        self.loop_stack.pop()
+        # a key consumed in the body but never rebound there is eaten
+        # again by every iteration (params and closures included)
+        for key_id in sorted(frame["consumed"] - frame["stored"]):
+            st = self.state.get(key_id)
+            line = st.consumed_at[-1] if st and st.consumed_at \
+                else stmt.lineno
+            self.findings.append(Finding(
+                "RNG002", self.pf.path, line,
+                f"key {key_id!r} is consumed inside a loop without "
+                f"being rebound each iteration — every pass reuses "
+                f"the same key", detail=f"{key_id}@loop"))
+        for frame_outer in self.loop_stack:
+            frame_outer["stored"].update(frame["stored"])
+            frame_outer["consumed"].update(frame["consumed"])
+
+
+class RngPass(LintPass):
+    name = "rng"
+    rules = {
+        "RNG001": "sampler consumes a raw PRNGKey (no split/fold_in)",
+        "RNG002": "PRNG key value consumed more than once",
+    }
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        for pf in ctx.py_files:
+            imports = astutil.import_map(pf.tree)
+            if not any(v.startswith("jax") for v in imports.values()):
+                continue
+            scopes: List[List[ast.stmt]] = [pf.tree.body]
+            scopes += [fn.body for fn in astutil.functions(pf.tree)]
+            for body in scopes:
+                an = _FnAnalyzer(pf, imports)
+                an.run_block(body)
+                yield from an.findings

@@ -1,0 +1,238 @@
+"""Tracing safety (rules TRC001/TRC002).
+
+Inside a jitted/scanned body every array is a tracer: Python ``if`` /
+``while`` / ``assert`` on one either raises ``TracerBoolConversionError``
+at trace time or — worse — silently bakes the first-trace branch into
+the compiled program, and host escapes (``.item()``, ``float()``,
+``np.*``) force a device sync that breaks the async dispatch pipeline
+the scheduler's deadline accounting relies on.
+
+Traced bodies are found structurally, not by execution:
+
+* defs decorated with ``jax.jit`` / ``partial(jax.jit, ...)``;
+* functions passed (directly, or wrapped in ``functools.partial``) to
+  ``jax.jit``, ``jax.lax.scan`` / ``while_loop`` / ``fori_loop`` /
+  ``cond`` / ``switch``, ``jax.shard_map``, or ``pl.pallas_call``;
+* lambdas passed to those same combinators;
+* defs nested inside any of the above.
+
+* **TRC001** — ``if`` / ``while`` / ``assert`` whose test *evaluates
+  array code* (a ``jnp.*`` / ``lax.*`` call, or an ``.any()/.all()/
+  .sum()/.item()``-style reduction) inside a traced body. Plain
+  predicates on static Python values (``if ss is not None``,
+  ``if has_own:``) are deliberately NOT flagged — closures over Python
+  bools are how the engine specializes compiled variants.
+* **TRC002** — ``.item()`` / ``float()/int()/bool()`` on a non-literal /
+  ``np.*`` (host numpy) calls inside a traced body.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.repolint import astutil
+from tools.repolint.core import Context, Finding, LintPass, PyFile
+
+# dotted-path consumers whose function arguments get traced
+_TRACING_CONSUMERS = {
+    "jax.jit", "jax.api.jit",
+    "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop",
+    "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.cond", "lax.cond",
+    "jax.lax.switch", "lax.switch",
+    "jax.lax.map", "lax.map",
+    "jax.shard_map", "jax.experimental.shard_map.shard_map",
+    "jax.experimental.pallas.pallas_call", "pl.pallas_call",
+    "jax.checkpoint", "jax.remat", "jax.grad", "jax.value_and_grad",
+    "jax.vmap", "jax.pmap",
+}
+_ARRAY_METHODS = {"any", "all", "sum", "max", "min", "mean", "prod",
+                  "item", "astype", "argmax", "argmin"}
+_ARRAY_MODULES = ("jax.numpy.", "jnp.", "jax.lax.", "lax.",
+                  "jax.random.")
+_HOST_CASTS = {"float", "int", "bool"}
+
+
+def _is_array_expr(node: ast.AST, imports: Dict[str, str]) -> bool:
+    """Does evaluating ``node`` run jax array code?"""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        path = astutil.resolve(sub.func, imports)
+        if path and (path.startswith(_ARRAY_MODULES)
+                     or path.startswith("jax.numpy")):
+            return True
+        if isinstance(sub.func, ast.Attribute) \
+                and sub.func.attr in _ARRAY_METHODS:
+            return True
+    return False
+
+
+def _partial_target(call: ast.Call, imports: Dict[str, str]
+                    ) -> Optional[str]:
+    """Name wrapped by ``[functools.]partial(name, ...)``."""
+    path = astutil.resolve(call.func, imports)
+    if path in ("functools.partial", "partial") and call.args \
+            and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+def _collect_traced(pf: PyFile, imports: Dict[str, str]
+                    ) -> List[astutil.FunctionNode]:
+    """Function defs whose bodies run under trace."""
+    traced_names: Set[str] = set()
+    traced_lambdas: List[ast.Lambda] = []
+    # partial wrappers: local name -> wrapped fn name
+    partial_of: Dict[str, str] = {}
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            tgt = _partial_target(node.value, imports)
+            if tgt:
+                partial_of[node.targets[0].id] = tgt
+            # name = jax.jit(fn, ...)
+            path = astutil.resolve(node.value.func, imports)
+            if path in _TRACING_CONSUMERS:
+                pass  # handled below with every consumer call
+
+    for node in ast.walk(pf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = astutil.resolve(node.func, imports)
+        if path not in _TRACING_CONSUMERS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                traced_names.add(partial_of.get(arg.id, arg.id))
+            elif isinstance(arg, ast.Lambda):
+                traced_lambdas.append(arg)
+            elif isinstance(arg, ast.Call):
+                tgt = _partial_target(arg, imports)
+                if tgt:
+                    traced_names.add(tgt)
+
+    roots: List[astutil.FunctionNode] = []
+    for fn in astutil.functions(pf.tree):
+        if fn.name in traced_names:
+            roots.append(fn)
+            continue
+        for dec in fn.decorator_list:
+            d = dec.func if isinstance(dec, ast.Call) else dec
+            path = astutil.resolve(d, imports)
+            if path in _TRACING_CONSUMERS:
+                roots.append(fn)
+                break
+            if isinstance(dec, ast.Call):
+                inner = astutil.resolve(
+                    dec.args[0] if dec.args else ast.Constant(None),
+                    imports)
+                p = astutil.resolve(dec.func, imports)
+                if p in ("functools.partial", "partial") \
+                        and inner in _TRACING_CONSUMERS:
+                    roots.append(fn)
+                    break
+    # nested defs inside traced roots are traced too
+    out: List[astutil.FunctionNode] = []
+    seen: Set[int] = set()
+    stack = list(roots)
+    while stack:
+        fn = stack.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        out.append(fn)
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(sub, astutil.FUNC_NODES):
+                stack.append(sub)
+    # traced lambdas get checked for host escapes only (a lambda body
+    # cannot contain if/while/assert statements)
+    return out, traced_lambdas
+
+
+class TracingPass(LintPass):
+    name = "tracing"
+    rules = {
+        "TRC001": "host control flow (if/while/assert) on a traced value",
+        "TRC002": "host escape (.item()/float()/np.*) inside a traced "
+                  "body",
+    }
+
+    def run(self, ctx: Context) -> Iterable[Finding]:
+        for pf in ctx.py_files:
+            imports = astutil.import_map(pf.tree)
+            if not any(v.startswith("jax") for v in imports.values()):
+                continue
+            traced_fns, traced_lambdas = _collect_traced(pf, imports)
+            for fn in traced_fns:
+                yield from self._check_body(pf, imports, fn, fn.name)
+            for lam in traced_lambdas:
+                yield from self._host_escapes(pf, imports, lam,
+                                              "<lambda>")
+
+    def _check_body(self, pf: PyFile, imports: Dict[str, str],
+                    fn: astutil.FunctionNode, where: str
+                    ) -> Iterable[Finding]:
+        for stmt in astutil.body_statements(fn):
+            if isinstance(stmt, astutil.SCOPE_NODES):
+                continue
+            test = None
+            kind = None
+            if isinstance(stmt, ast.If):
+                test, kind = stmt.test, "if"
+            elif isinstance(stmt, ast.While):
+                test, kind = stmt.test, "while"
+            elif isinstance(stmt, ast.Assert):
+                test, kind = stmt.test, "assert"
+            if test is not None and _is_array_expr(test, imports):
+                yield Finding(
+                    "TRC001", pf.path, stmt.lineno,
+                    f"Python `{kind}` on a traced array value inside "
+                    f"jitted body {where!r}; use lax.cond/lax.select "
+                    f"or checkify instead",
+                    detail=f"{kind}@{where}")
+            yield from self._host_escapes(pf, imports, stmt, where)
+
+    def _host_escapes(self, pf: PyFile, imports: Dict[str, str],
+                      node: ast.AST, where: str) -> Iterable[Finding]:
+        nodes = astutil._stmt_expr_nodes(node) \
+            if isinstance(node, ast.stmt) else ast.walk(node)
+        for sub in nodes:
+            if not isinstance(sub, ast.Call):
+                continue
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "item":
+                yield Finding(
+                    "TRC002", pf.path, sub.lineno,
+                    f".item() forces a host sync inside traced body "
+                    f"{where!r}", detail=f"item@{where}")
+                continue
+            path = astutil.resolve(sub.func, imports)
+            if path and (path.startswith("numpy.")
+                         or path == "numpy"):
+                yield Finding(
+                    "TRC002", pf.path, sub.lineno,
+                    f"host numpy call `{path}` inside traced body "
+                    f"{where!r}; use jax.numpy",
+                    detail=f"{path}@{where}")
+                continue
+            if isinstance(sub.func, ast.Name) \
+                    and sub.func.id in _HOST_CASTS and sub.args \
+                    and not isinstance(sub.args[0], ast.Constant):
+                # int(x) on a literal is fine; on a traced value it
+                # syncs. We can't see types — flag non-constant args
+                # only when the arg mentions a call or subscript (most
+                # static shapes are plain names: int(x.shape[0]) is
+                # still static, so exempt .shape chains).
+                arg = sub.args[0]
+                txt = ast.dump(arg)
+                if "attr='shape'" in txt or "attr='ndim'" in txt \
+                        or "attr='size'" in txt:
+                    continue
+                yield Finding(
+                    "TRC002", pf.path, sub.lineno,
+                    f"{sub.func.id}() on a possibly-traced value "
+                    f"inside traced body {where!r} forces a host sync",
+                    detail=f"{sub.func.id}@{where}")
